@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.report            # markdown to stdout
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCHS = ["qwen2-vl-2b", "granite-3-8b", "kimi-k2-1t-a32b",
+         "deepseek-v2-236b", "glm4-9b", "minicpm-2b", "musicgen-large",
+         "zamba2-7b", "xlstm-125m", "yi-6b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh="single", tag=""):
+    out = {}
+    for a in ARCHS:
+        for s in SHAPES:
+            suffix = f"__{tag}" if tag else ""
+            p = os.path.join(DRYRUN, f"{a}__{s}__{mesh}{suffix}.json")
+            if os.path.exists(p):
+                with open(p) as f:
+                    out[(a, s)] = json.load(f)
+    return out
+
+
+def _gb(x):
+    return f"{x/2**30:.1f}"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | lower+compile (s) | per-dev arg GB | "
+          "per-dev temp GB | HLO GFLOP/dev | collective GB/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(recs.items()):
+        full = r.get("full", {})
+        mem = full.get("memory", {})
+        sc = r.get("scaled", {})
+        lc = full.get("lower_s", 0) + full.get("compile_s", 0)
+        print(f"| {a} | {s} | {lc:.0f} | {_gb(mem.get('argument_bytes', 0))} "
+              f"| {_gb(mem.get('temp_bytes', 0))} "
+              f"| {sc.get('flops', 0)/1e9:,.0f} "
+              f"| {_gb(sc.get('link_bytes', 0))} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| useful FLOP ratio | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    hints = {
+        ("memory_s", "train"): "remat-free layout + bf16 master copy; on TPU "
+            "fusion collapses most HLO bytes — see §Perf",
+        ("memory_s", "prefill"): "flash-attention tiling keeps S×S scores in "
+            "VMEM (kernels/flash_attention.py)",
+        ("memory_s", "decode"): "KV-cache is the floor: batch more requests "
+            "per chip or quantize cache",
+        ("collective_s", "train"): "overlap grad all-reduce with backward; "
+            "FSDP reduce-scatter instead of all-reduce",
+        ("collective_s", "prefill"): "shard sequence axis; all-gather KV "
+            "once per layer instead of activations",
+        ("collective_s", "decode"): "replicate small params; avoid per-token "
+            "all-gather of the cache",
+        ("compute_s", "train"): "already compute-bound — raise per-chip "
+            "batch until HBM limit",
+    }
+    for (a, s), r in sorted(recs.items()):
+        ro = r.get("roofline")
+        if not ro:
+            continue
+        kind = r.get("kind", "train")
+        hint = hints.get((ro["dominant"], kind), "see §Perf")
+        print(f"| {a} | {s} | {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+              f"| {ro['collective_s']:.3f} | {ro['dominant'].replace('_s','')} "
+              f"| {ro.get('useful_ratio', 0):.2f} | {hint} |")
+
+
+def summary(recs):
+    n = len(recs)
+    dom = {}
+    worst = None
+    for k, r in recs.items():
+        ro = r.get("roofline")
+        if not ro:
+            continue
+        dom[ro["dominant"]] = dom.get(ro["dominant"], 0) + 1
+        tot = ro["compute_s"] + ro["memory_s"] + ro["collective_s"]
+        frac = ro["compute_s"] / max(tot, 1e-12)
+        if worst is None or frac < worst[1]:
+            worst = (k, frac)
+    print(f"\n{n} combos; dominant-term histogram: {dom}")
+    if worst:
+        print(f"worst compute fraction: {worst[0]} ({worst[1]:.1%})")
+
+
+def main():
+    recs = load("single")
+    print(f"## §Dry-run (single-pod 16x16, {len(recs)}/40 combos)\n")
+    dryrun_table(recs)
+    multi = load("multi")
+    if multi:
+        print(f"\n## §Dry-run (multi-pod 2x16x16, {len(multi)}/40 combos)\n")
+        dryrun_table(multi)
+    print("\n## §Roofline (single-pod)\n")
+    roofline_table(recs)
+    summary(recs)
+
+
+if __name__ == "__main__":
+    main()

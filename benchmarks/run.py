@@ -1,0 +1,270 @@
+"""Benchmark harness — one benchmark per paper table/figure + system benches.
+
+Paper artefacts (CollaFuse, ECIS'24):
+  fig1_disclosure   Fig. 1 — how concealed is x_t at each candidate cut step
+                    (MSE + KID vs t), using the cosine schedule.
+  fig3_tradeoff     Fig. 3 — cut-ratio sweep: KID performance (U-shape, H1),
+                    disclosure at t_c (H2b), client FLOP share (H2c).
+                    Short training budget so the full sweep runs on CPU.
+  energy_split      H2c table — deterministic client/server FLOP accounting
+                    per cut-ratio (codecarbon stand-in).
+
+System benches:
+  kernels           Pallas kernels (interpret mode) vs pure-jnp oracle:
+                    correctness (max|Δ|) + per-call wall time.
+  roofline          The §Roofline table, read from results/dryrun/*.json
+                    (produced by ``python -m repro.launch.dryrun --sweep``).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run                 # all (CPU-sized)
+    PYTHONPATH=src python -m benchmarks.run --only fig3_tradeoff --rounds 120
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def _timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us/call
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 — concealment vs candidate cut step
+# ---------------------------------------------------------------------------
+def bench_fig1_disclosure(args):
+    from repro.core import privacy
+    from repro.data.synthetic import ClientDataConfig, make_client_datasets
+    from repro.diffusion import ddpm
+    from repro.diffusion.schedule import cosine_schedule
+
+    T = 100
+    sched = cosine_schedule(T)
+    clients, _ = make_client_datasets(
+        ClientDataConfig(n_clients=1, per_client=64, image_size=32))
+    x0 = clients[0]
+    fp = privacy.feature_params()
+    key = jax.random.PRNGKey(0)
+    print("# fig1_disclosure: concealment of x_t vs timestep t "
+          "(cut c => t_split = c*T)")
+    print("t,cut_ratio_equiv,mse,kid")
+    rows = []
+    for t_val in (5, 10, 20, 40, 60, 80, 95, 100):
+        t = jnp.full((x0.shape[0],), t_val, jnp.int32)
+        eps = jax.random.normal(jax.random.fold_in(key, t_val), x0.shape)
+        x_t = ddpm.q_sample(sched, x0, t, eps)
+        mse = float(privacy.mse_disclosure(x0, x_t))
+        kid = float(privacy.kid(fp, x0, x_t))
+        rows.append({"t": t_val, "c": t_val / T, "mse": mse, "kid": kid})
+        print(f"{t_val},{t_val/T:.2f},{mse:.4f},{kid:.4f}")
+    # paper claim: concealment grows with t — most steps hide the image
+    mses = [r["mse"] for r in rows]
+    assert all(a <= b + 1e-6 for a, b in zip(mses, mses[1:])), \
+        "MSE concealment must be monotone in t"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 — the full trade-off sweep (reduced budget)
+# ---------------------------------------------------------------------------
+def bench_fig3_tradeoff(args):
+    import dataclasses
+
+    from repro.configs.base import UNetConfig
+    from repro.core import privacy
+    from repro.core.trainer import CollaFuseTrainer, TrainerConfig
+    from repro.data.synthetic import ClientDataConfig, image_batches, \
+        make_client_datasets
+    from repro.models import unet
+
+    ucfg = dataclasses.replace(
+        UNetConfig().reduced(), image_size=16, base_channels=16)
+    dcfg = ClientDataConfig(n_clients=3, per_client=96, image_size=16,
+                            holdout=48)
+    clients, holdout = make_client_datasets(dcfg)
+    init_fn = functools.partial(unet.init_params, cfg=ucfg)
+    apply_fn = lambda p, x, t: unet.forward(p, x, t, ucfg)
+    fp = privacy.feature_params()
+
+    print("# fig3_tradeoff: cut-ratio sweep "
+          f"({args.rounds} rounds each, 16x16, T=50)")
+    print("cut_ratio,kid_train_sum,kid_holdout_sum,"
+          "disclosure_mse,client_flop_fraction")
+    rows = []
+    for c in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
+        tcfg = TrainerConfig(n_clients=3, T=50, cut_ratio=c, lr=1e-3)
+        tr = CollaFuseTrainer(tcfg, init_fn, apply_fn)
+        iters = [image_batches(cl, 32, seed=i)
+                 for i, cl in enumerate(clients)]
+        m = {}
+        for _ in range(args.rounds):
+            m = tr.train_round([next(it) for it in iters])
+        kid_tr, kid_ho, mse_d = 0.0, 0.0, 0.0
+        for k in range(3):
+            key = jax.random.fold_in(jax.random.PRNGKey(7), k)
+            gen = tr.sample(key, (32, 16, 16, 1), client_idx=k)
+            disclosed = tr.disclosed(key, clients[k][:32], client_idx=k)
+            kid_tr += float(privacy.kid(fp, clients[k], gen))
+            kid_ho += float(privacy.kid(fp, holdout, gen))
+            mse_d += float(privacy.mse_disclosure(clients[k][:32],
+                                                  disclosed)) / 3
+        rows.append({"c": c, "kid_train_sum": kid_tr,
+                     "kid_holdout_sum": kid_ho, "disclosure_mse": mse_d,
+                     "client_flops": m["client_fraction"]})
+        print(f"{c:.1f},{kid_tr:+.4f},{kid_ho:+.4f},{mse_d:.4f},"
+              f"{m['client_fraction']:.3f}", flush=True)
+    # H2c invariant: client share of compute is monotone in c
+    fr = [r["client_flops"] for r in rows]
+    assert all(a <= b + 1e-9 for a, b in zip(fr, fr[1:])), fr
+    with open(os.path.join(RESULTS, "bench_fig3.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# H2c — energy/FLOP split accounting
+# ---------------------------------------------------------------------------
+def bench_energy_split(args):
+    from repro.core.collafuse import CutPlan, flops_split
+    print("# energy_split: client/server denoising FLOPs per cut-ratio "
+          "(T=100, 1 GFLOP/model-call, batch 150 — paper's setup)")
+    print("cut_ratio,server_gflops,client_gflops,client_fraction")
+    rows = []
+    for c in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
+        s = flops_split(CutPlan(100, c), 1e9, 150)
+        rows.append(s)
+        print(f"{c:.1f},{s['server_flops']/1e9:.0f},"
+              f"{s['client_flops']/1e9:.0f},{s['client_fraction']:.3f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle
+# ---------------------------------------------------------------------------
+def bench_kernels(args):
+    from repro.diffusion import ddpm as ddpm_mod
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    print("# kernels: Pallas (interpret mode on CPU) vs jnp oracle")
+    print("name,us_per_call_kernel,us_per_call_ref,max_abs_err")
+    rows = []
+
+    # flash attention (B, S, H, HD) with GQA kv heads
+    b, s, h, kv, hd = 2, 256, 8, 2, 64
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    f_k = jax.jit(functools.partial(ops.flash_attention, causal=True))
+    f_r = jax.jit(functools.partial(ref.attention_ref, causal=True))
+    us_k, out_k = _timeit(f_k, q, k, v)
+    us_r, out_r = _timeit(f_r, q, k, v)
+    err = float(jnp.abs(out_k - out_r).max())
+    print(f"flash_attention,{us_k:.0f},{us_r:.0f},{err:.2e}")
+    rows.append(("flash_attention", err, 2e-4))
+
+    # ssm scan: x (B,S,NH,P), dt (B,S,NH), a (NH,), bm/cm (B,S,N)
+    b, s, nh, p, n = 2, 128, 8, 32, 16
+    x = jax.random.normal(ks[3], (b, s, nh, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (b, s, nh), jnp.float32))
+    a = -jnp.exp(jax.random.normal(ks[0], (nh,)) * 0.3)
+    bm = jax.random.normal(ks[1], (b, s, n), jnp.float32)
+    cm = jax.random.normal(ks[2], (b, s, n), jnp.float32)
+    f_k = jax.jit(functools.partial(ops.ssm_scan, chunk=32, head_block=8))
+    f_r = jax.jit(ref.ssm_scan_ref)
+    us_k, out_k = _timeit(f_k, x, dt, a, bm, cm)
+    us_r, out_r = _timeit(f_r, x, dt, a, bm, cm)
+    err = float(jnp.abs(out_k - out_r).max())
+    print(f"ssm_scan,{us_k:.0f},{us_r:.0f},{err:.2e}")
+    rows.append(("ssm_scan", err, 1e-3))
+
+    # fused ddpm sampling step vs p_sample
+    sched = cosine_schedule(100)
+    shp = (8, 32, 32, 1)
+    x_t = jax.random.normal(ks[0], shp, jnp.float32)
+    eps_hat = jax.random.normal(ks[1], shp, jnp.float32)
+    noise = jax.random.normal(ks[2], shp, jnp.float32)
+    t = jnp.full((8,), 50, jnp.int32)
+    f_k = jax.jit(lambda x1, t1, e1, n1: ops.ddpm_step(sched, x1, t1, e1, n1))
+    f_r = jax.jit(lambda x1, t1, e1, n1: ddpm_mod.p_sample(sched, x1, t1,
+                                                           e1, n1))
+    us_k, out_k = _timeit(f_k, x_t, t, eps_hat, noise)
+    us_r, out_r = _timeit(f_r, x_t, t, eps_hat, noise)
+    err = float(jnp.abs(out_k - out_r).max())
+    print(f"ddpm_step,{us_k:.0f},{us_r:.0f},{err:.2e}")
+    rows.append(("ddpm_step", err, 1e-4))
+
+    for name, err, tol in rows:
+        assert err < tol, f"{name} diverged from oracle: {err} >= {tol}"
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Roofline table from the dry-run artefacts
+# ---------------------------------------------------------------------------
+def bench_roofline(args):
+    if not os.path.isdir(DRYRUN):
+        print("# roofline: results/dryrun missing — run "
+              "`python -m repro.launch.dryrun --sweep` first")
+        return []
+    files = sorted(f for f in os.listdir(DRYRUN) if f.endswith(".json"))
+    print("# roofline: per (arch x shape x mesh) from dry-run artefacts")
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio")
+    rows = []
+    for fn in files:
+        with open(os.path.join(DRYRUN, fn)) as f:
+            rec = json.load(f)
+        r = rec.get("roofline")
+        if not r:
+            continue
+        rows.append(rec)
+        print(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+              f"{r['compute_s']:.5f},{r['memory_s']:.5f},"
+              f"{r['collective_s']:.5f},{r['dominant']},"
+              f"{r.get('useful_ratio', 0):.3f}")
+    print(f"# {len(rows)} combos recorded")
+    return rows
+
+
+BENCHES = {
+    "fig1_disclosure": bench_fig1_disclosure,
+    "fig3_tradeoff": bench_fig3_tradeoff,
+    "energy_split": bench_energy_split,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    ap.add_argument("--rounds", type=int, default=40,
+                    help="training rounds per cut-ratio in fig3_tradeoff")
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    t0 = time.time()
+    for name in names:
+        print(f"\n==== {name} ====", flush=True)
+        BENCHES[name](args)
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: CollaFuse split training + split inference in ~a minute on CPU.
+
+Runs the paper's 6-step protocol (Fig. 2) for a handful of rounds with
+3 clients and a reduced U-Net, then generates images with the split sampler
+(server prefix -> client suffix) and reports the disclosure metrics at the
+cut point.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import UNetConfig
+from repro.core import privacy
+from repro.core.trainer import CollaFuseTrainer, TrainerConfig
+from repro.data.synthetic import ClientDataConfig, image_batches, \
+    make_client_datasets
+from repro.models import unet
+
+
+def main():
+    # --- reduced paper backbone (16x16 images so CPU is fast) -------------
+    ucfg = UNetConfig().reduced()
+    tcfg = TrainerConfig(n_clients=3, T=50, cut_ratio=0.8, lr=1e-3)
+    init_fn = functools.partial(unet.init_params, cfg=ucfg)
+    apply_fn = lambda p, x, t: unet.forward(p, x, t, ucfg)
+    trainer = CollaFuseTrainer(tcfg, init_fn, apply_fn)
+    print(trainer.plan.describe())
+
+    # --- per-client synthetic "MRI" data ----------------------------------
+    dcfg = ClientDataConfig(n_clients=3, per_client=64,
+                            image_size=ucfg.image_size, holdout=32)
+    clients, holdout = make_client_datasets(dcfg)
+    iters = [image_batches(c, batch=16, seed=i) for i, c in enumerate(clients)]
+
+    # --- a few protocol rounds --------------------------------------------
+    for r in range(8):
+        m = trainer.train_round([next(it) for it in iters])
+        print(f"round {r}: server_loss={m.get('server_loss', float('nan')):.4f} "
+              f"client_loss={m.get('client_loss_mean', float('nan')):.4f} "
+              f"client_flop_fraction={m['client_fraction']:.2f}")
+
+    # --- split inference ----------------------------------------------------
+    key = jax.random.PRNGKey(42)
+    x0, x_mid = trainer.sample(key, (8, ucfg.image_size, ucfg.image_size, 1),
+                               client_idx=0, return_intermediate=True)
+    print(f"generated {x0.shape}, finite={bool(jnp.isfinite(x0).all())}")
+
+    # --- what does the server actually see at the cut? ----------------------
+    fp = privacy.feature_params()
+    disclosed = trainer.disclosed(jax.random.PRNGKey(7), clients[0][:16],
+                                  client_idx=0)
+    rep = privacy.disclosure_report(fp, clients[0][:16], disclosed)
+    print(f"disclosure at t_split: mse={rep['mse']:.3f} kid={rep['kid']:.4f} "
+          f"(higher = more concealed)")
+
+
+if __name__ == "__main__":
+    main()

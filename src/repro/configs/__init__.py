@@ -1,0 +1,43 @@
+"""Config registry: ``get_config(arch_id)`` / ``list_archs()`` / input shapes."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    UNetConfig,
+)
+
+_ARCH_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "granite-3-8b": "granite_3_8b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "glm4-9b": "glm4_9b",
+    "minicpm-2b": "minicpm_2b",
+    "musicgen-large": "musicgen_large",
+    "zamba2-7b": "zamba2_7b",
+    "xlstm-125m": "xlstm_125m",
+    "yi-6b": "yi_6b",
+    "paper-unet": "paper_unet",
+}
+
+
+def list_archs(include_unet: bool = False):
+    archs = [a for a in _ARCH_MODULES if a != "paper-unet"]
+    if include_unet:
+        archs.append("paper-unet")
+    return archs
+
+
+def get_config(arch_id: str):
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,185 @@
+"""CollaFuse: cut-ratio governed split of the DDPM denoising chain.
+
+Paper semantics (§3, Fig. 1/2): the denoising sequence of T steps is split by
+cut-ratio c ∈ [0,1].  Counting *denoising steps* (s = 1 is the first, noisiest
+step at timestep t = T), the server executes the first (1-c)·T steps and each
+client executes the remaining c·T steps on its own private model.
+
+In *timestep* coordinates (t = T … 1) the cut falls at::
+
+    t_split = round(c · T)
+    server:  t ∈ (t_split, T]   — trained on ALL clients' noised data (shared)
+    client:  t ∈ [1, t_split]   — trained on local data only (private)
+
+c = 1 → fully local training (the paper's non-collaborative baseline);
+c = 0 → fully offloaded.  The partially-denoised images x_{t_split} are what
+the server hands back (protocol step 5) — the paper's disclosed-information
+metrics compare them against real client images.
+
+Because the DDPM loss is a per-timestep expectation, the two segments are
+independently trainable — this is the observation that makes the split work
+(paper §6 "independently trainable components").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import ddpm
+from repro.diffusion.schedule import DiffusionSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class CutPlan:
+    """The split of a T-step chain at cut-ratio c."""
+
+    T: int
+    cut_ratio: float                       # c ∈ [0, 1]
+
+    def __post_init__(self):
+        assert 0.0 <= self.cut_ratio <= 1.0, self.cut_ratio
+
+    @property
+    def t_split(self) -> int:
+        return int(round(self.cut_ratio * self.T))
+
+    # --- timestep ranges (inclusive), empty encoded as (lo > hi) ---
+    @property
+    def server_range(self) -> Tuple[int, int]:
+        return (self.t_split + 1, self.T)
+
+    @property
+    def client_range(self) -> Tuple[int, int]:
+        return (1, self.t_split)
+
+    @property
+    def n_server_steps(self) -> int:
+        return self.T - self.t_split
+
+    @property
+    def n_client_steps(self) -> int:
+        return self.t_split
+
+    @property
+    def server_fraction(self) -> float:
+        return self.n_server_steps / self.T
+
+    def describe(self) -> str:
+        return (f"c={self.cut_ratio:.2f}: server denoises t∈({self.t_split},"
+                f"{self.T}] ({self.n_server_steps} steps), client t∈[1,"
+                f"{self.t_split}] ({self.n_client_steps} steps)")
+
+
+# ---------------------------------------------------------------------------
+# Split losses (training)
+# ---------------------------------------------------------------------------
+def server_loss_fn(sched: DiffusionSchedule, plan: CutPlan,
+                   model_fn: Callable):
+    """DDPM loss restricted to the server's timestep range.
+
+    ``model_fn(params, x_t, t) -> eps_hat``.  Returns loss fn over the
+    *noised* samples a client uploaded (protocol steps 3-4): the server never
+    touches x_0.
+    """
+    def loss(params, x_t, t, eps):
+        # t-range enforcement happens client-side in make_server_batch
+        eps_hat = model_fn(params, x_t, t)
+        return jnp.mean(jnp.square(eps_hat - eps))
+    return loss
+
+
+def client_loss_fn(sched: DiffusionSchedule, plan: CutPlan,
+                   model_fn: Callable):
+    """DDPM loss over the client's private range, computed from local x_0."""
+    lo, hi = plan.client_range
+
+    def loss(params, key, x0):
+        return ddpm.ddpm_loss(
+            sched, lambda x_t, t: model_fn(params, x_t, t), key, x0,
+            t_range=(lo, hi))[0]
+    return loss
+
+
+def make_server_batch(sched: DiffusionSchedule, plan: CutPlan, key, x0):
+    """Client-side protocol steps 2-3: sample t from the SERVER range, noise
+    locally, and emit only (x_t, t, eps) — never x_0."""
+    lo, hi = plan.server_range
+    k_t, k_n = jax.random.split(key)
+    b = x0.shape[0]
+    t = jax.random.randint(k_t, (b,), lo, hi + 1)
+    eps = jax.random.normal(k_n, x0.shape, x0.dtype)
+    x_t = ddpm.q_sample(sched, x0, t, eps)
+    return {"x_t": x_t, "t": t, "eps": eps}
+
+
+# ---------------------------------------------------------------------------
+# Split inference (sampling)
+# ---------------------------------------------------------------------------
+def split_sample(sched: DiffusionSchedule, plan: CutPlan,
+                 server_fn: Callable, client_fn: Callable, key, shape,
+                 return_intermediate: bool = False,
+                 use_kernel: bool = False):
+    """Full CollaFuse generation.
+
+    1. client draws x_T ~ N(0, I);
+    2. server denoises t = T … t_split+1 with the shared backbone;
+    3. x_{t_split} crosses back to the client (the DISCLOSED tensor);
+    4. client finishes t = t_split … 1 with its private model.
+
+    Returns x_0 (and x_{t_split} if ``return_intermediate``).
+    """
+    k_init, k_srv, k_cli = jax.random.split(key, 3)
+    x_t = jax.random.normal(k_init, shape, jnp.float32)
+    if plan.n_server_steps > 0:
+        x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t,
+                                  plan.T, plan.t_split + 1,
+                                  use_kernel=use_kernel)
+    else:
+        x_mid = x_t
+    if plan.n_client_steps > 0:
+        x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid,
+                               plan.t_split, 1, use_kernel=use_kernel)
+    else:
+        x0 = x_mid
+    if return_intermediate:
+        return x0, x_mid
+    return x0
+
+
+def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
+                       server_fn: Callable, key, x0_client):
+    """What the server *could* reconstruct of a real client image: noise the
+    client's x_0 to x_T, denoise on the server down to t_split (paper Fig. 1
+    columns).  Used by the disclosure benchmarks."""
+    k_n, k_s = jax.random.split(key)
+    b = x0_client.shape[0]
+    t_top = jnp.full((b,), sched.T, jnp.int32)
+    eps = jax.random.normal(k_n, x0_client.shape, x0_client.dtype)
+    x_T = ddpm.q_sample(sched, x0_client, t_top, eps)
+    if plan.n_server_steps == 0:
+        return x_T
+    return ddpm.sample_range(sched, server_fn, k_s, x_T,
+                             plan.T, plan.t_split + 1)
+
+
+# ---------------------------------------------------------------------------
+# Compute split accounting (paper H2c — GPU energy proxy)
+# ---------------------------------------------------------------------------
+def flops_split(plan: CutPlan, flops_per_model_call: float,
+                batch: int) -> dict:
+    """Denoising FLOPs executed per side for one generated batch, plus the
+    client's (cheap) diffusion pass.  The paper measures GPU energy with
+    codecarbon; on TPU/CPU we report the deterministic FLOP split (DESIGN.md
+    §3.2) — the monotone-in-c claim (H2c) is preserved exactly."""
+    server = plan.n_server_steps * flops_per_model_call * batch
+    client = plan.n_client_steps * flops_per_model_call * batch
+    diffusion_pass = 10.0 * batch  # q_sample: a handful of elementwise ops
+    return {
+        "server_flops": server,
+        "client_flops": client + diffusion_pass,
+        "client_fraction": (client + diffusion_pass) /
+                           max(server + client + diffusion_pass, 1.0),
+    }

@@ -1,0 +1,88 @@
+"""Disclosed-information metrics: pixel MSE and KID (paper §4-5).
+
+KID = unbiased MMD² with the polynomial kernel k(x,y) = (xᵀy/d + 1)³
+(Binkowski et al. 2018), over features from a FIXED random convolutional
+extractor (clean-fid's InceptionV3 is unavailable offline; a frozen random
+conv net preserves *relative* orderings — every claim in the paper is a
+comparison across cut-ratios, not an absolute KID level; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# Feature extractor
+# ---------------------------------------------------------------------------
+def feature_params(key=None, channels=(16, 32, 64), in_ch=1, feat_dim=256):
+    """Frozen random conv features (seeded; identical across all metric
+    calls so comparisons are consistent)."""
+    key = key if key is not None else jax.random.PRNGKey(1234)
+    ks = split_keys(key, len(channels) + 1)
+    params = []
+    c_prev = in_ch
+    for i, c in enumerate(channels):
+        params.append(dense_init(ks[i], (3, 3, c_prev, c), 9 * c_prev))
+        c_prev = c
+    head = dense_init(ks[-1], (c_prev, feat_dim), c_prev)
+    return {"convs": params, "head": head}
+
+
+def extract_features(params, images):
+    """images: (N,H,W,C) in [-1,1] -> (N, feat_dim)."""
+    x = images.astype(jnp.float32)
+    for w in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.leaky_relu(x, 0.2)
+    x = x.mean(axis=(1, 2))                       # global average pool
+    return x @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# KID (unbiased MMD^2, polynomial kernel)
+# ---------------------------------------------------------------------------
+def _poly_kernel(x, y):
+    d = x.shape[-1]
+    return (x @ y.T / d + 1.0) ** 3
+
+
+def kid_from_features(fx, fy):
+    """Unbiased MMD² estimator (Binkowski et al. 2018, eq. 3)."""
+    m, n = fx.shape[0], fy.shape[0]
+    kxx = _poly_kernel(fx, fx)
+    kyy = _poly_kernel(fy, fy)
+    kxy = _poly_kernel(fx, fy)
+    sum_kxx = (kxx.sum() - jnp.trace(kxx)) / (m * (m - 1))
+    sum_kyy = (kyy.sum() - jnp.trace(kyy)) / (n * (n - 1))
+    sum_kxy = kxy.mean()
+    return sum_kxx + sum_kyy - 2 * sum_kxy
+
+
+def kid(params, real, generated):
+    """KID between two image batches (lower = closer distributions)."""
+    fx = extract_features(params, real)
+    fy = extract_features(params, generated)
+    return kid_from_features(fx, fy)
+
+
+# ---------------------------------------------------------------------------
+# Pixel-level disclosure
+# ---------------------------------------------------------------------------
+def mse_disclosure(real, disclosed):
+    """Paper: 'MSE for a pixel-by-pixel comparison' between real client images
+    and the partially-denoised images at the split step.  HIGHER = more
+    concealed."""
+    return jnp.mean(jnp.square(real.astype(jnp.float32) -
+                               disclosed.astype(jnp.float32)))
+
+
+def disclosure_report(feat_params, real, disclosed):
+    return {
+        "mse": float(mse_disclosure(real, disclosed)),
+        "kid": float(kid(feat_params, real, disclosed)),
+    }

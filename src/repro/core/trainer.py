@@ -1,0 +1,169 @@
+"""CollaFuse collaborative trainer — the paper's 6-step protocol (Fig. 2).
+
+Roles:
+* ``server``: ONE shared backbone ε_s, trained on noised samples from ALL
+  clients, timesteps t ∈ (t_split, T].
+* ``clients[k]``: private model ε_k per client, trained on local data only,
+  timesteps t ∈ [1, t_split].
+
+One ``train_round``:
+  (1) server triggers each client                      [control flow]
+  (2) client runs forward diffusion on a local batch   [cheap, local]
+  (3) client uploads (x_t, t, ε) for server-range t    [network hop]
+  (4) server takes a gradient step on the shared model [heavy, shared]
+  (5) server returns partially-denoised x_{t_split}    [network hop]
+  (6) client takes a gradient step on its local model  [local]
+
+In this offline container the "network hops" are host-level array handoffs;
+on the production mesh the server step is the pjit program that
+``launch/dryrun.py`` lowers (DESIGN.md §3.1).  Per-side FLOP accounting
+replaces codecarbon energy (H2c proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collafuse
+from repro.core.collafuse import CutPlan
+from repro.diffusion import ddpm
+from repro.diffusion.schedule import DiffusionSchedule, get_schedule
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    n_clients: int = 3
+    T: int = 50
+    cut_ratio: float = 0.8
+    schedule: str = "cosine"             # paper: cosine variance schedule
+    lr: float = 1e-3                     # paper: 0.001
+    grad_clip: float = 1.0
+    seed: int = 0
+
+
+class CollaFuseTrainer:
+    """Holds server + per-client params/optimizer states and jitted steps.
+
+    ``init_fn(key) -> params`` and ``apply_fn(params, x_t, t) -> eps_hat``
+    abstract the backbone (paper U-Net, or any assigned architecture with a
+    diffusion head).
+    """
+
+    def __init__(self, cfg: TrainerConfig, init_fn: Callable,
+                 apply_fn: Callable,
+                 flops_per_call: Optional[float] = None):
+        self.cfg = cfg
+        self.apply_fn = apply_fn
+        self.sched: DiffusionSchedule = get_schedule(cfg.schedule, cfg.T)
+        self.plan = CutPlan(cfg.T, cfg.cut_ratio)
+        self.opt_cfg = adamw.AdamWConfig(lr=cfg.lr, grad_clip=cfg.grad_clip)
+
+        key = jax.random.PRNGKey(cfg.seed)
+        k_s, *k_c = jax.random.split(key, cfg.n_clients + 1)
+        self.server_params = init_fn(k_s)
+        self.server_opt = adamw.init_state(self.server_params, self.opt_cfg)
+        self.client_params: List[Any] = [init_fn(k) for k in k_c]
+        self.client_opts = [adamw.init_state(p, self.opt_cfg)
+                            for p in self.client_params]
+        self._rng = jax.random.PRNGKey(cfg.seed + 17)
+        n_params = sum(x.size for x in jax.tree.leaves(self.server_params))
+        # forward+backward proxy when no analytic estimate is supplied
+        self.flops_per_call = (flops_per_call if flops_per_call is not None
+                               else 6.0 * n_params)
+        self.metrics_history: List[Dict] = []
+
+        self._server_update = jax.jit(self._make_server_update())
+        self._client_update = jax.jit(self._make_client_update())
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def _make_server_update(self):
+        loss_fn = collafuse.server_loss_fn(self.sched, self.plan,
+                                           self.apply_fn)
+
+        def update(params, opt, x_t, t, eps):
+            loss, grads = jax.value_and_grad(loss_fn)(params, x_t, t, eps)
+            params, opt, m = adamw.apply_updates(params, grads, opt,
+                                                 self.opt_cfg)
+            return params, opt, loss, m["grad_norm"]
+        return update
+
+    def _make_client_update(self):
+        loss_fn = collafuse.client_loss_fn(self.sched, self.plan,
+                                           self.apply_fn)
+
+        def update(params, opt, key, x0):
+            loss, grads = jax.value_and_grad(loss_fn)(params, key, x0)
+            params, opt, m = adamw.apply_updates(params, grads, opt,
+                                                 self.opt_cfg)
+            return params, opt, loss, m["grad_norm"]
+        return update
+
+    # ------------------------------------------------------------------
+    def train_round(self, client_batches: List[jnp.ndarray]) -> Dict:
+        """One full protocol round over all clients."""
+        assert len(client_batches) == self.cfg.n_clients
+        metrics: Dict[str, float] = {}
+        total_b = 0
+        # steps 1-3: clients noise locally and upload server-range samples
+        uploads = []
+        if self.plan.n_server_steps > 0:
+            for k, x0 in enumerate(client_batches):
+                up = collafuse.make_server_batch(self.sched, self.plan,
+                                                 self._next_key(), x0)
+                uploads.append(up)
+                total_b += x0.shape[0]
+            # step 4: ONE shared backbone update on the pooled uploads
+            x_t = jnp.concatenate([u["x_t"] for u in uploads])
+            t = jnp.concatenate([u["t"] for u in uploads])
+            eps = jnp.concatenate([u["eps"] for u in uploads])
+            (self.server_params, self.server_opt, s_loss,
+             s_gnorm) = self._server_update(self.server_params,
+                                            self.server_opt, x_t, t, eps)
+            metrics["server_loss"] = float(s_loss)
+            metrics["server_grad_norm"] = float(s_gnorm)
+        # step 6: each client trains its private range on local data
+        if self.plan.n_client_steps > 0:
+            closses = []
+            for k, x0 in enumerate(client_batches):
+                (self.client_params[k], self.client_opts[k], c_loss,
+                 _) = self._client_update(self.client_params[k],
+                                          self.client_opts[k],
+                                          self._next_key(), x0)
+                closses.append(float(c_loss))
+            metrics["client_loss_mean"] = sum(closses) / len(closses)
+            metrics["client_losses"] = closses
+        # H2c energy proxy
+        b = client_batches[0].shape[0]
+        metrics.update(collafuse.flops_split(self.plan, self.flops_per_call, b))
+        self.metrics_history.append(metrics)
+        return metrics
+
+    # ------------------------------------------------------------------
+    def model_fns(self, client_idx: int):
+        server_fn = functools.partial(self.apply_fn, self.server_params)
+        client_fn = functools.partial(self.apply_fn,
+                                      self.client_params[client_idx])
+        return server_fn, client_fn
+
+    def sample(self, key, shape, client_idx: int = 0,
+               return_intermediate: bool = False):
+        """Split inference: server prefix + client's private suffix."""
+        server_fn, client_fn = self.model_fns(client_idx)
+        return collafuse.split_sample(self.sched, self.plan, server_fn,
+                                      client_fn, key, shape,
+                                      return_intermediate=return_intermediate)
+
+    def disclosed(self, key, x0_client, client_idx: int = 0):
+        """x_{t_split} as reconstructed by the server from a client upload."""
+        server_fn, _ = self.model_fns(client_idx)
+        return collafuse.disclosed_at_split(self.sched, self.plan, server_fn,
+                                            key, x0_client)

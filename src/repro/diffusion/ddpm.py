@@ -1,0 +1,103 @@
+"""DDPM processes: q_sample (forward diffusion), p_sample (denoise step),
+training loss, and full/partial samplers.
+
+Timestep convention matches the paper's Figure 1: t ∈ {1..T}; x_T is pure
+noise; denoising runs t = T → 1; the CollaFuse cut at ratio c splits the chain
+at t_c = (1-c)·T — the server executes t ∈ (t_c, T], clients t ∈ [1, t_c].
+
+``model_fn(x_t, t, train) -> eps_hat`` abstracts the backbone (U-Net or any
+assigned transformer with a diffusion head).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.schedule import DiffusionSchedule
+
+
+def _bcast(a: jnp.ndarray, t_idx: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """Gather per-timestep scalars and broadcast to an image batch shape."""
+    v = a[t_idx]
+    return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+
+
+def q_sample(sched: DiffusionSchedule, x0, t, noise):
+    """Forward diffusion x_t ~ q(x_t | x_0).  t: (B,) int32 in {1..T}."""
+    ti = t - 1
+    return (_bcast(sched.sqrt_alpha_bar, ti, x0.ndim) * x0 +
+            _bcast(sched.sqrt_one_minus_alpha_bar, ti, x0.ndim) * noise)
+
+
+def ddpm_loss(sched: DiffusionSchedule, model_fn: Callable, key, x0,
+              t_range: Optional[Tuple[int, int]] = None):
+    """Simple-loss (Ho et al. eq. 14): MSE(eps, eps_hat).
+
+    ``t_range=(lo, hi)``: sample t uniformly from {lo..hi} — this is how
+    CollaFuse restricts the server model to t ∈ (t_c, T] and client models to
+    t ∈ [1, t_c].
+    """
+    lo, hi = t_range if t_range is not None else (1, sched.T)
+    k_t, k_n = jax.random.split(key)
+    b = x0.shape[0]
+    t = jax.random.randint(k_t, (b,), lo, hi + 1)
+    noise = jax.random.normal(k_n, x0.shape, x0.dtype)
+    x_t = q_sample(sched, x0, t, noise)
+    eps_hat = model_fn(x_t, t)
+    return jnp.mean(jnp.square(eps_hat - noise)), {"t": t}
+
+
+def p_sample(sched: DiffusionSchedule, x_t, t, eps_hat, noise):
+    """One reverse step x_{t-1} ~ p(x_{t-1} | x_t) given predicted noise.
+
+    t: (B,) int32; ``noise`` must be zeros where t == 1.
+    """
+    ti = t - 1
+    beta = _bcast(sched.betas, ti, x_t.ndim)
+    alpha = _bcast(sched.alphas, ti, x_t.ndim)
+    somab = _bcast(sched.sqrt_one_minus_alpha_bar, ti, x_t.ndim)
+    mean = (x_t - beta / somab * eps_hat) / jnp.sqrt(alpha)
+    var = _bcast(sched.posterior_var, ti, x_t.ndim)
+    is_last = (t == 1).reshape((-1,) + (1,) * (x_t.ndim - 1))
+    return mean + jnp.where(is_last, 0.0, jnp.sqrt(var)) * noise
+
+
+def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
+                 t_from: int, t_to: int, use_kernel: bool = False,
+                 clip: float = 3.0):
+    """Run the reverse chain from t_from down to t_to (inclusive).
+
+    Returns x_{t_to - 1} — i.e. after executing steps t_from, ..., t_to.
+    Full sampling: x_start ~ N(0,I), t_from=T, t_to=1.
+    Server partial denoise (CollaFuse step 4-5): t_from=T, t_to=t_c+1.
+    Client completion (step 6): t_from=t_c, t_to=1.
+
+    ``clip`` bounds the iterate after every step (the ``clip_denoised``
+    stabilisation of Ho et al.'s reference sampler — without it an
+    undertrained εθ diverges geometrically through the 1/sqrt(alpha)
+    factor).  0 disables.
+    """
+    if t_from < t_to:
+        return x_start
+    b = x_start.shape[0]
+
+    def body(i, carry):
+        x, k = carry
+        t = t_from - i
+        k, k_n = jax.random.split(k)
+        tb = jnp.full((b,), t, jnp.int32)
+        eps_hat = model_fn(x, tb)
+        noise = jax.random.normal(k_n, x.shape, x.dtype)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            x = kops.ddpm_step(sched, x, tb, eps_hat, noise)
+        else:
+            x = p_sample(sched, x, tb, eps_hat, noise)
+        if clip:
+            x = jnp.clip(x, -clip, clip)
+        return (x, k)
+
+    x, _ = jax.lax.fori_loop(0, t_from - t_to + 1, body, (x_start, key))
+    return x

@@ -1,0 +1,71 @@
+"""Variance schedules for DDPMs (cosine — the paper's choice — and linear)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    """Precomputed DDPM quantities for T steps (Ho et al. 2020, Nichol 2021).
+
+    Index convention: arrays have length T; index t-1 holds the value for
+    timestep t ∈ {1..T}.  ``alpha_bar[t-1]`` = ∏_{s<=t} (1-beta_s).
+    """
+
+    betas: jnp.ndarray
+    alphas: jnp.ndarray
+    alpha_bar: jnp.ndarray
+    sqrt_alpha_bar: jnp.ndarray
+    sqrt_one_minus_alpha_bar: jnp.ndarray
+    posterior_var: jnp.ndarray
+
+    @property
+    def T(self) -> int:
+        return int(self.betas.shape[0])
+
+
+def cosine_schedule(T: int, s: float = 0.008) -> DiffusionSchedule:
+    """Nichol & Dhariwal improved-DDPM cosine schedule (the paper uses this)."""
+    steps = np.arange(T + 1, dtype=np.float64) / T
+    f = np.cos((steps + s) / (1 + s) * np.pi / 2) ** 2
+    alpha_bar = f / f[0]
+    betas = np.clip(1.0 - alpha_bar[1:] / alpha_bar[:-1], 0.0, 0.999)
+    return _build(betas)
+
+
+def linear_schedule(T: int, beta_start=1e-4, beta_end=0.02) -> DiffusionSchedule:
+    """Ho et al. linear schedule.  The published (1e-4, 0.02) range is tuned
+    for T=1000; for shorter chains the range is rescaled by 1000/T so the
+    terminal SNR still reaches ~0 (alpha_bar(T) ≈ 4e-5 at any T) — the
+    standard rescaling used when shortening DDPM chains."""
+    scale = 1000.0 / T
+    betas = np.linspace(scale * beta_start, min(scale * beta_end, 0.999), T,
+                        dtype=np.float64)
+    return _build(betas)
+
+
+def _build(betas: np.ndarray) -> DiffusionSchedule:
+    alphas = 1.0 - betas
+    alpha_bar = np.cumprod(alphas)
+    alpha_bar_prev = np.concatenate([[1.0], alpha_bar[:-1]])
+    posterior_var = betas * (1.0 - alpha_bar_prev) / (1.0 - alpha_bar)
+    f32 = lambda a: jnp.asarray(a, jnp.float32)
+    return DiffusionSchedule(
+        betas=f32(betas),
+        alphas=f32(alphas),
+        alpha_bar=f32(alpha_bar),
+        sqrt_alpha_bar=f32(np.sqrt(alpha_bar)),
+        sqrt_one_minus_alpha_bar=f32(np.sqrt(1.0 - alpha_bar)),
+        posterior_var=f32(posterior_var),
+    )
+
+
+def get_schedule(name: str, T: int) -> DiffusionSchedule:
+    if name == "cosine":
+        return cosine_schedule(T)
+    if name == "linear":
+        return linear_schedule(T)
+    raise ValueError(name)

@@ -1,0 +1,75 @@
+"""Pallas TPU fused DDPM denoise-update kernel.
+
+The p_sample update  x_{t-1} = (x_t − β/√(1−ᾱ)·ε̂)/√α + σ·z  is executed T
+times per generated image — the paper's inner loop.  Unfused it is 4 HBM
+round-trips of the image tensor; this kernel fuses it into one read of
+(x_t, ε̂, z) + one write, with the per-sample scalar coefficients staged in
+SMEM.
+
+Grid: (batch, pixel_blocks); block = (1, 512·8) lanes — pure VPU work, no MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _step_kernel(x_ref, eps_ref, noise_ref, coef_ref, o_ref):
+    """x/eps/noise: (1, blk); coef: (1, 4) = (c_eps, inv_sqrt_alpha, sigma,
+    keep_noise)."""
+    c_eps = coef_ref[0, 0]
+    inv_sa = coef_ref[0, 1]
+    sigma = coef_ref[0, 2]
+    keep = coef_ref[0, 3]
+    x = x_ref[...].astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    z = noise_ref[...].astype(jnp.float32)
+    mean = (x - c_eps * eps) * inv_sa
+    o_ref[...] = (mean + keep * sigma * z).astype(o_ref.dtype)
+
+
+def ddpm_step_coefs(sched, t):
+    """Per-sample coefficients for timesteps t: (B,) -> (B, 4) f32."""
+    ti = t - 1
+    beta = sched.betas[ti]
+    c_eps = beta / sched.sqrt_one_minus_alpha_bar[ti]
+    inv_sa = jax.lax.rsqrt(sched.alphas[ti])
+    sigma = jnp.sqrt(sched.posterior_var[ti])
+    keep = (t > 1).astype(jnp.float32)
+    return jnp.stack([c_eps, inv_sa, sigma, keep], axis=-1)
+
+
+def ddpm_step(x_t, eps_hat, noise, coefs, *, block: int = 4096,
+              interpret: bool = True):
+    """Fused denoise update.  x_t/eps_hat/noise: (B, ...); coefs: (B, 4)."""
+    b = x_t.shape[0]
+    flat = x_t.reshape(b, -1)
+    d = flat.shape[1]
+    block = min(block, d)
+    pad = (-d) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        eps_hat = jnp.pad(eps_hat.reshape(b, -1), ((0, 0), (0, pad)))
+        noise = jnp.pad(noise.reshape(b, -1), ((0, 0), (0, pad)))
+    else:
+        eps_hat = eps_hat.reshape(b, -1)
+        noise = noise.reshape(b, -1)
+    dp = flat.shape[1]
+    out = pl.pallas_call(
+        _step_kernel,
+        grid=(b, dp // block),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((1, block), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((1, block), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((1, 4), lambda ib, ic: (ib, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda ib, ic: (ib, ic)),
+        out_shape=jax.ShapeDtypeStruct((b, dp), x_t.dtype),
+        interpret=interpret,
+    )(flat, eps_hat, noise, coefs)
+    if pad:
+        out = out[:, :d]
+    return out.reshape(x_t.shape)

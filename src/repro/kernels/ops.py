@@ -1,0 +1,42 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``REPRO_PALLAS_INTERPRET=0`` switches to compiled Mosaic lowering (real TPU);
+the default (1) runs the kernel bodies in python on CPU — this container.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ddpm_step as _ddpm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssm_scan as _ssm
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block"))
+def ssm_scan(x, dt, a, bm, cm, *, chunk: int = 128, head_block: int = 8):
+    return _ssm.ssm_scan(x, dt, a, bm, cm, chunk=chunk,
+                         head_block=head_block, interpret=_interpret())
+
+
+def ddpm_step(sched, x_t, t, eps_hat, noise):
+    """Fused denoise update; drop-in for diffusion.ddpm.p_sample."""
+    coefs = _ddpm.ddpm_step_coefs(sched, t)
+    return _ddpm.ddpm_step(x_t, eps_hat, noise, coefs,
+                           interpret=_interpret())

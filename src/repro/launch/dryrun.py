@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import and gives this process
+512 placeholder host devices for the production meshes.  Tests/benches import
+other modules and keep seeing 1 device.
+
+Per combo this produces (results/dryrun/<arch>__<shape>__<mesh>[__tag].json):
+  * proof: full-config scan-model ``lower().compile()`` + memory_analysis,
+  * cost:  1-unit and 2-unit UNROLLED probe compiles -> scaled HLO flops /
+           bytes / per-collective link bytes (see launch/roofline.py),
+  * roofline: the three time terms + dominant bottleneck + useful-FLOPs ratio.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import jit_step_for
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mesh_for(name: str):
+    return make_production_mesh(multi_pod=(name == "multi"))
+
+
+def _flatten_args(args):
+    return args
+
+
+def compile_combo(cfg, shape, mesh, *, unroll=False, fsdp=False, remat=False,
+                  donate=True, seq_shard_attn=False, cache_seq_shard=False):
+    jitted, args = jit_step_for(cfg, shape, mesh, unroll=unroll, fsdp=fsdp,
+                                remat=remat, donate=donate,
+                                seq_shard_attn=seq_shard_attn,
+                                cache_seq_shard=cache_seq_shard)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    out = {
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "utilization_ops": {k: v for k, v in ca.items()
+                            if k in ("transcendentals",)},
+    }
+    if ma is not None:
+        out["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    return compiled, out
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str, *,
+              fsdp=False, remat=False, tag="", probes=True,
+              skip_full=False, seq_shard_attn=False, cache_seq_shard=False,
+              capacity_factor=None) -> dict:
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    shape = get_shape(shape_name)
+    mesh = _mesh_for(mesh_name)
+    n_devices = mesh.size
+    window = sp.serve_window(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "kind": shape.kind, "window": window,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "fsdp": fsdp, "remat": remat,
+        "seq_shard_attn": seq_shard_attn, "cache_seq_shard": cache_seq_shard,
+        "capacity_factor": capacity_factor,
+    }
+    levers = dict(fsdp=fsdp, remat=remat, seq_shard_attn=seq_shard_attn,
+                  cache_seq_shard=cache_seq_shard)
+    # ---- proof compile: full config, scan-over-layers ----
+    if not skip_full:
+        compiled, full = compile_combo(cfg, shape, mesh, unroll=False,
+                                       **levers)
+        rec["full"] = full
+        del compiled
+    # ---- cost probes: unrolled 1-unit / 2-unit ----
+    if probes:
+        (u1, u2), n_units = rl.probe_units(cfg)
+        probes_out = {}
+        costs = {}
+        for label, nl in (("probe1", u1), ("probe2", u2)):
+            pcfg = rl.probe_config(cfg, nl)
+            compiled, info = compile_combo(pcfg, shape, mesh, unroll=True,
+                                           donate=False, **levers)
+            coll = rl.parse_collectives(compiled.as_text(), n_devices)
+            info["collectives"] = coll
+            probes_out[label] = info
+            costs[label] = {
+                "flops": info["flops"],
+                "bytes": info["bytes_accessed"],
+                "link_bytes": coll["total_link_bytes"],
+                **{f"link:{k}": v for k, v in coll["link_bytes"].items()},
+            }
+            del compiled
+        scaled = rl.scale_probe_costs(costs["probe1"], costs["probe2"],
+                                      n_units)
+        rec["probes"] = probes_out
+        rec["n_units"] = n_units
+        rec["scaled"] = scaled
+        # per-device flops: probes compile the GLOBAL program; XLA cost
+        # analysis reports whole-program (per-partition) numbers already
+        rec["roofline"] = rl.roofline_terms(
+            cfg, shape, n_chips=n_devices, window=window,
+            hlo_flops=scaled["flops"] * n_devices_correction(n_devices),
+            hlo_bytes=scaled["bytes"],
+            link_bytes=scaled["link_bytes"])
+    return rec
+
+
+def n_devices_correction(n_devices: int) -> float:
+    """XLA CPU SPMD cost analysis reports the PER-PARTITION module; the
+    roofline wants whole-job FLOPs, so multiply back by device count."""
+    return float(n_devices)
+
+
+def result_path(arch, shape, mesh_name, tag=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--seq-shard-attn", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--skip-full", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 512, \
+        f"dryrun needs 512 forced host devices, got {jax.device_count()}"
+
+    combos = []
+    if args.sweep:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                combos.append((arch, shape, args.mesh))
+    else:
+        combos.append((args.arch, args.shape, args.mesh))
+
+    failures = []
+    for arch, shape, mesh_name in combos:
+        path = result_path(arch, shape, mesh_name, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip] {path} exists", flush=True)
+            continue
+        t0 = time.time()
+        print(f"[run ] {arch} × {shape} × {mesh_name} "
+              f"(fsdp={args.fsdp} remat={args.remat})", flush=True)
+        try:
+            rec = run_combo(arch, shape, mesh_name, fsdp=args.fsdp,
+                            remat=args.remat, tag=args.tag,
+                            probes=not args.no_probes,
+                            skip_full=args.skip_full,
+                            seq_shard_attn=args.seq_shard_attn,
+                            cache_seq_shard=args.cache_seq_shard,
+                            capacity_factor=args.capacity_factor)
+            rec["wall_s"] = round(time.time() - t0, 1)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            r = rec.get("roofline", {})
+            print(f"[ ok ] {arch} × {shape} × {mesh_name} "
+                  f"wall={rec['wall_s']}s dominant={r.get('dominant')} "
+                  f"compute={r.get('compute_s', 0):.4f}s "
+                  f"memory={r.get('memory_s', 0):.4f}s "
+                  f"collective={r.get('collective_s', 0):.4f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — sweep must survive one failure
+            failures.append((arch, shape, mesh_name, repr(e)))
+            print(f"[FAIL] {arch} × {shape} × {mesh_name}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("dry-run complete: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Abstract input construction for every (architecture × input shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, no device allocation.  Modality frontends are stubs per the
+assignment: VLM patch embeddings and audio conditioning embeddings arrive
+precomputed with the right shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tf
+
+
+def serve_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding-window size for this (arch, shape) pair (0 = full attention).
+
+    long_500k REQUIRES sub-quadratic serving: SSM/hybrid archs are natively
+    O(1)-state (the hybrid's shared attention blocks still window); every
+    other family serves long_500k with the sliding-window variant.
+    """
+    if shape.name != "long_500k":
+        return 0
+    if cfg.family == "ssm":
+        return 0                      # no attention at all
+    return cfg.sliding_window or 8192
+
+
+def _emb_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def batch_specs_abstract(cfg: ModelConfig, shape: InputShape,
+                         kind: Optional[str] = None) -> Dict:
+    """The model-input batch as ShapeDtypeStructs."""
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.family == "audio":
+            batch["cond_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_cond_tokens, cfg.d_model), _emb_dtype(cfg))
+        return batch
+    s_text = s - cfg.n_vision_tokens if cfg.family == "vlm" else s
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+    if kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.d_model), _emb_dtype(cfg))
+    if cfg.family == "audio":
+        batch["cond_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_cond_tokens, cfg.d_model), _emb_dtype(cfg))
+    return batch
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_abstract(cfg: ModelConfig, shape: InputShape, window: int):
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              window=window))
+
+
+def opt_abstract(params_abs, opt_cfg=None):
+    from repro.optim import adamw
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    return jax.eval_shape(
+        lambda: adamw.init_state(
+            jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), params_abs),
+            opt_cfg))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Everything the lowered step consumes, as abstract values."""
+    window = serve_window(cfg, shape)
+    out = {"batch": batch_specs_abstract(cfg, shape)}
+    if shape.kind == "train":
+        p = params_abstract(cfg)
+        out["params"] = p
+        out["opt_state"] = opt_abstract(p)
+    elif shape.kind == "prefill":
+        out["params"] = params_abstract(cfg)
+    else:
+        out["params"] = params_abstract(cfg)
+        out["cache"] = cache_abstract(cfg, shape, window)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

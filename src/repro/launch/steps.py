@@ -1,0 +1,106 @@
+"""jit-able step functions (train / prefill / decode) with sharding plumbing."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import batch_axes_of
+from repro.launch.specs import serve_window
+from repro.models import transformer as tf
+from repro.models.layers import ShardCtx
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+def make_ctx(mesh, *, seq_shard_attn: bool = False,
+             cache_seq_shard: bool = False) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes_of(mesh),
+                    seq_shard_attn=seq_shard_attn,
+                    cache_seq_shard=cache_seq_shard)
+
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None, *,
+                    window: int = 0, unroll: bool = False,
+                    remat: bool = False):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, batch, cfg, ctx, window=window,
+                          unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        f = loss_fn
+        if remat:
+            f = jax.checkpoint(loss_fn)
+        (loss, aux), grads = jax.value_and_grad(f, has_aux=True)(params, batch)
+        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, {"loss": loss, **aux, **m}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx, *, window: int = 0,
+                      unroll: bool = False):
+    def prefill_step(params, batch):
+        return tf.prefill(params, batch, cfg, ctx, window=window,
+                          unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx, *, window: int = 0,
+                     unroll: bool = False):
+    def decode_step(params, cache, batch, pos):
+        return tf.decode_step(params, cache, batch, pos, cfg, ctx,
+                              window=window, unroll=unroll)
+    return decode_step
+
+
+def jit_step_for(cfg: ModelConfig, shape: InputShape, mesh, *,
+                 unroll: bool = False, fsdp: bool = False,
+                 remat: bool = False, donate: bool = True,
+                 seq_shard_attn: bool = False, cache_seq_shard: bool = False,
+                 extra_opts: Optional[dict] = None):
+    """Build the jitted (but not yet lowered) step + abstract args for a
+    (config, input-shape, mesh) combination.  Returns (jitted, args_tuple)."""
+    from repro.launch import specs as sp
+    ctx = make_ctx(mesh, seq_shard_attn=seq_shard_attn,
+                   cache_seq_shard=cache_seq_shard)
+    window = serve_window(cfg, shape)
+    ins = sp.input_specs(cfg, shape)
+    p_spec = shd.param_specs(ins["params"], ctx, fsdp=fsdp)
+    p_shard = shd.to_shardings(p_spec, mesh)
+    b_shard = shd.to_shardings(shd.batch_specs(ins["batch"], ctx), mesh)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, ctx, window=window, unroll=unroll,
+                               remat=remat)
+        o_spec = {"step": jax.sharding.PartitionSpec(),
+                  "mu": p_spec, "nu": p_spec}
+        o_shard = shd.to_shardings(o_spec, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1) if donate else ())
+        args = (ins["params"], ins["opt_state"], ins["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx, window=window, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (ins["params"], ins["batch"])
+    else:
+        step = make_decode_step(cfg, ctx, window=window, unroll=unroll)
+        c_shard = shd.to_shardings(shd.cache_specs(ins["cache"], ctx), mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, b_shard, None),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,) if donate else ())
+        args = (ins["params"], ins["cache"], ins["batch"], ins["pos"])
+    return jitted, args

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1) decode.
+
+The chunked algorithm follows the SSD formulation (Dao & Gu, 2024): within a
+chunk the state-space mixing is computed quadratically; chunk-to-chunk state is
+carried with a python-level loop so XLA cost analysis counts every chunk (see
+DESIGN.md §6 — ``lax.scan`` bodies are counted once, which would corrupt the
+roofline).  Chunk count is capped at 32 per call.
+
+Layout: n_groups = 1 (B/C shared across heads, the Mamba2 default); heads are
+sharded over the model axis via activation constraints.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx, dense_init, shard, split_keys
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    nh, n = cfg.ssm_heads, cfg.ssm_state
+    ks = split_keys(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, di), d, dtype=dtype),
+        "w_x": dense_init(ks[1], (d, di), d, dtype=dtype),
+        "w_B": dense_init(ks[2], (d, n), d, dtype=dtype),
+        "w_C": dense_init(ks[3], (d, n), d, dtype=dtype),
+        "w_dt": dense_init(ks[4], (d, nh), d, dtype=dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_w": dense_init(ks[5], (cfg.conv_width, di + 2 * n),
+                             cfg.conv_width, dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),               # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[6], (di, d), di, dtype=dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv along S.  xbc: (B,S,C); conv_w: (W,C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * \
+            conv_w[i].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    """Mamba2 output norm: RMSNorm(y * silu(z)) * scale."""
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def _chunk_len(s: int, cfg: ModelConfig) -> int:
+    c = cfg.ssm_chunk
+    while s // c > 32:            # cap unrolled chunk count
+        c *= 2
+    return min(c, s)
+
+
+def ssm_forward(x, p, cfg: ModelConfig, ctx: ShardCtx):
+    """x: (B,S,d) -> (B,S,d).  Full-sequence (train / prefill) path."""
+    b, s, d = x.shape
+    di, nh, n, hd = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"],
+                    preferred_element_type=jnp.float32)
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xi, bm, cm = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    xi = shard(xi, ctx, "batch", None, "model")
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B,S,nh) f32
+    dt = shard(dt, ctx, "batch", None, "model")
+    a = -jnp.exp(p["A_log"])                                   # (nh,)
+
+    xh = xi.reshape(b, s, nh, hd)
+    xh = shard(xh, ctx, "batch", None, "model", None)
+    l = _chunk_len(s, cfg)
+    nc = s // l
+    assert nc * l == s
+    y_chunks = []
+    state = jnp.zeros((b, nh, n, hd), jnp.float32)
+    for c in range(nc):
+        sl = slice(c * l, (c + 1) * l)
+        dtc = dt[:, sl]                                        # (B,L,nh)
+        dta = dtc * a                                          # (B,L,nh)
+        cum = jnp.cumsum(dta, axis=1)                          # inclusive
+        xc = xh[:, sl].astype(jnp.float32)                     # (B,L,nh,hd)
+        bc = bm[:, sl].astype(jnp.float32)                     # (B,L,n)
+        cc = cm[:, sl].astype(jnp.float32)
+        # intra-chunk quadratic term
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L,L,nh) t,s
+        tri = jnp.tril(jnp.ones((l, l), bool))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        g = jnp.einsum("btn,bsn->bts", cc, bc)                 # (B,L,L)
+        w = g[:, :, :, None] * m * dtc[:, None, :, :]          # (B,t,s,nh)
+        y = jnp.einsum("btsh,bshp->bthp", w, xc)               # (B,L,nh,hd)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("btn,bhnp->bthp", cc, state) * \
+            jnp.exp(cum)[:, :, :, None]
+        # state update to end of chunk
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)              # (B,L,nh)
+        upd = jnp.einsum("bsn,bshp->bhnp",
+                         bc, xc * (dtc * decay_end)[..., None])
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + upd
+        y_chunks.append(y)
+    y = jnp.concatenate(y_chunks, axis=1)                      # (B,S,nh,hd) f32
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di, nh, n = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, nh, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def ssm_decode(x, p, cache, cfg: ModelConfig, ctx: ShardCtx):
+    """One token.  x: (B,1,d).  Returns (out (B,1,d), new cache)."""
+    b = x.shape[0]
+    di, nh, n, hd = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)[:, 0]
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)[:, 0]
+    bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)[:, 0]
+    cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"],
+                    preferred_element_type=jnp.float32)[:, 0]
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)               # (B,C)
+    conv_hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
+    w = p["conv_w"].shape[0]
+    out = (conv_hist.astype(jnp.float32) *
+           p["conv_w"].astype(jnp.float32)[None]).sum(axis=1) + \
+        p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(out).astype(x.dtype)
+    xi, bm, cm = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B,nh)
+    a = -jnp.exp(p["A_log"])
+    xhead = xi.reshape(b, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                    # (B,nh)
+    upd = jnp.einsum("bn,bhp->bhnp", bm.astype(jnp.float32),
+                     xhead * dt[..., None])
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xhead
+    y = y.reshape(b, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = {"state": state, "conv": conv_hist[:, 1:]}
+    return out[:, None], new_cache

@@ -1,0 +1,683 @@
+"""Generic decoder backbone covering all assigned families.
+
+Families and their layer stacks:
+
+* dense / vlm / audio : [attn + (cross-attn) + SwiGLU] × L, scanned.
+* moe                 : ``first_dense`` dense layers unrolled, then
+                        [attn + MoE] × (L - first_dense), scanned.
+* ssm (xlstm)         : groups of ``slstm_every`` blocks ([mLSTM ×(k-1), sLSTM]),
+                        scanned over groups; remainder mLSTM blocks unrolled.
+* hybrid (zamba2)     : groups of [shared-attn + Mamba2 × attn_every], scanned;
+                        the attention block's weights are SHARED across groups;
+                        remainder group unrolled.
+
+``unroll=True`` replaces every ``lax.scan`` over layers/groups by a python
+loop — used by the dry-run cost probes so XLA FLOP counts are exact
+(``cost_analysis`` counts a scan body once; DESIGN.md §6).
+
+Entry points: ``init_params``, ``forward`` (train/prefill logits), ``prefill``
+(logits + filled cache), ``init_cache``, ``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    ShardCtx, embed, embed_init, mlp, mlp_init, rmsnorm, rmsnorm_init, shard,
+    softmax_cross_entropy, split_keys, unembed)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(fn, key, n: int):
+    keys = jnp.stack(split_keys(key, n))
+    return jax.vmap(fn)(keys)
+
+
+def _tree_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ===========================================================================
+# Layer-level init / apply / decode per family
+# ===========================================================================
+def _dense_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    p = {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attention_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cfg.cross_attention:
+        p["norm_c"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn.cross_attention_init(k3, cfg, dtype)
+    return p
+
+
+def _dense_layer_apply(x, p, cfg, ctx, *, positions, window, cond, kernel):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = attn.mla_forward(h, p["attn"], cfg, ctx, positions=positions,
+                             window=window, kernel=kernel)
+    else:
+        a = attn.gqa_forward(h, p["attn"], cfg, ctx, positions=positions,
+                             window=window, kernel=kernel)
+    x = x + a
+    if cfg.cross_attention:
+        x = x + attn.cross_attention(
+            rmsnorm(x, p["norm_c"], cfg.norm_eps), cond, p["cross"], cfg, ctx)
+    x = x + mlp(rmsnorm(x, p["norm2"], cfg.norm_eps), p["mlp"], ctx)
+    return shard(x, ctx, "batch", None, None)
+
+
+def _dense_layer_decode(x, p, cache, pos, cfg, ctx, *, window, cond_kv):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, kv = attn.mla_decode(h, p["attn"], cache["kv"], pos, cfg, ctx,
+                                window=window)
+    else:
+        a, kv = attn.gqa_decode(h, p["attn"], cache["kv"], pos, cfg, ctx,
+                                window=window)
+    x = x + a
+    if cfg.cross_attention:
+        x = x + _cross_decode(rmsnorm(x, p["norm_c"], cfg.norm_eps),
+                              p["cross"], cache["cross_kv"], cfg)
+    x = x + mlp(rmsnorm(x, p["norm2"], cfg.norm_eps), p["mlp"], ctx)
+    return x, {**cache, "kv": kv}
+
+
+def _cross_decode(x, p, cross_kv, cfg):
+    """Cross-attn with precomputed K/V (B,C,H,hd)."""
+    import math
+    k, v = cross_kv["k"], cross_kv["v"]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    s = jnp.einsum("bshk,bchk->bhsc", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(cfg.head_dim)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhsc,bchk->bshk", pr.astype(x.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _moe_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attention_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_mod.moe_init(k2, cfg, dtype),
+    }
+
+
+def _moe_layer_apply(x, p, cfg, ctx, *, positions, window, kernel):
+    # Pin the residual stream to (batch, None, None) at both sides of the
+    # attention block: the MoE shard_map's token-sharded in_spec otherwise
+    # propagates BACKWARD through the residual into attention, and SPMD
+    # reshards every 2048x2048 f32 score chunk with all-to-alls
+    # (EXPERIMENTS.md §Perf, deepseek iteration 2: 17 GiB -> ~0.2 GiB
+    # per layer of collective traffic).
+    h = shard(rmsnorm(x, p["norm1"], cfg.norm_eps), ctx, "batch", None, None)
+    if cfg.attn_type == "mla":
+        a = attn.mla_forward(h, p["attn"], cfg, ctx, positions=positions,
+                             window=window, kernel=kernel)
+    else:
+        a = attn.gqa_forward(h, p["attn"], cfg, ctx, positions=positions,
+                             window=window, kernel=kernel)
+    x = shard(x + a, ctx, "batch", None, None)
+    m, aux = moe_mod.moe_forward(rmsnorm(x, p["norm2"], cfg.norm_eps),
+                                 p["moe"], cfg, ctx)
+    return shard(x + m, ctx, "batch", None, None), aux
+
+
+def _moe_layer_decode(x, p, cache, pos, cfg, ctx, *, window):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, kv = attn.mla_decode(h, p["attn"], cache["kv"], pos, cfg, ctx,
+                                window=window)
+    else:
+        a, kv = attn.gqa_decode(h, p["attn"], cache["kv"], pos, cfg, ctx,
+                                window=window)
+    x = x + a
+    m, _ = moe_mod.moe_forward(rmsnorm(x, p["norm2"], cfg.norm_eps),
+                               p["moe"], cfg, ctx)
+    return x + m, {**cache, "kv": kv}
+
+
+# ===========================================================================
+# Param init
+# ===========================================================================
+def init_params(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    k_embed, k_stack, k_extra = split_keys(key, 3)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                            cfg.tie_embeddings, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        params["layers"] = _stack_init(
+            lambda k: _dense_layer_init(k, cfg, dtype), k_stack, cfg.n_layers)
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense
+        dense_cfg = dataclasses.replace(cfg, family="dense",
+                                        cross_attention=False)
+        ks = split_keys(k_stack, cfg.first_dense + 1)
+        params["dense_layers"] = [
+            _dense_layer_init(ks[i], dense_cfg, dtype)
+            for i in range(cfg.first_dense)]
+        params["layers"] = _stack_init(
+            lambda k: _moe_layer_init(k, cfg, dtype), ks[-1], n_moe)
+    elif fam == "ssm":
+        k = cfg.slstm_every
+        if k:
+            g = cfg.n_layers // k
+            rem = cfg.n_layers - g * k
+            kg, kr = split_keys(k_stack, 2)
+            params["groups"] = {
+                "mlstm": _stack_init(
+                    lambda kk: _stack_init(
+                        lambda k2: xlstm_mod.mlstm_init(k2, cfg, dtype),
+                        kk, k - 1), kg, g),
+                "slstm": _stack_init(
+                    lambda kk: xlstm_mod.slstm_init(kk, cfg, dtype), kg, g),
+                "norms_m": _stack_init(
+                    lambda kk: _stack_init(
+                        lambda k2: rmsnorm_init(cfg.d_model, dtype), kk, k - 1),
+                    kg, g),
+                "norms_s": _stack_init(
+                    lambda kk: rmsnorm_init(cfg.d_model, dtype), kg, g),
+            }
+            params["rem"] = {
+                "mlstm": _stack_init(
+                    lambda kk: xlstm_mod.mlstm_init(kk, cfg, dtype), kr, rem),
+                "norms": _stack_init(
+                    lambda kk: rmsnorm_init(cfg.d_model, dtype), kr, rem),
+            } if rem else None
+        else:
+            params["layers"] = _stack_init(
+                lambda kk: xlstm_mod.mlstm_init(kk, cfg, dtype),
+                k_stack, cfg.n_layers)
+            params["norms"] = _stack_init(
+                lambda kk: rmsnorm_init(cfg.d_model, dtype),
+                k_stack, cfg.n_layers)
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers - g * cfg.attn_every
+        kg, kr, ka = split_keys(k_stack, 3)
+        params["shared_attn"] = {
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.attention_init(ka, cfg, dtype),
+        }
+        params["groups"] = {
+            "ssm": _stack_init(
+                lambda kk: _stack_init(
+                    lambda k2: ssm_mod.ssm_init(k2, cfg, dtype),
+                    kk, cfg.attn_every), kg, g),
+            "norms": _stack_init(
+                lambda kk: _stack_init(
+                    lambda k2: rmsnorm_init(cfg.d_model, dtype),
+                    kk, cfg.attn_every), kg, g),
+        }
+        params["rem"] = {
+            "ssm": _stack_init(
+                lambda kk: ssm_mod.ssm_init(kk, cfg, dtype), kr, rem),
+            "norms": _stack_init(
+                lambda kk: rmsnorm_init(cfg.d_model, dtype), kr, rem),
+        } if rem else None
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ===========================================================================
+# Positions / input assembly
+# ===========================================================================
+def _vlm_assemble(batch, params, cfg: ModelConfig, ctx: ShardCtx):
+    """Splice vision patch embeddings before text token embeddings."""
+    tok = embed(batch["tokens"], params["embed"], ctx)
+    vis = batch["vision_embeds"].astype(tok.dtype)
+    x = jnp.concatenate([vis, tok], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    p_vis = cfg.n_vision_tokens
+    grid = max(1, int(p_vis ** 0.5))
+    idx = jnp.arange(p_vis)
+    vis_pos = jnp.stack([jnp.zeros_like(idx), idx // grid, idx % grid])  # (3,P)
+    t0 = grid                                            # text starts after grid
+    tpos = jnp.arange(s - p_vis) + t0
+    text_pos = jnp.stack([tpos, tpos, tpos])             # (3,S_text)
+    pos = jnp.concatenate([vis_pos, text_pos], axis=1)   # (3,S)
+    positions = jnp.broadcast_to(pos[:, None, :], (3, b, s)).astype(jnp.int32)
+    return x, positions
+
+
+def _assemble(batch, params, cfg: ModelConfig, ctx: ShardCtx):
+    if cfg.family == "vlm":
+        return _vlm_assemble(batch, params, cfg, ctx)
+    x = embed(batch["tokens"], params["embed"], ctx)
+    return x, None
+
+
+# ===========================================================================
+# Forward (train / prefill logits)
+# ===========================================================================
+def forward(params, batch, cfg: ModelConfig, ctx: ShardCtx = ShardCtx(), *,
+            window: int = 0, unroll: bool = False, kernel: str = "jnp"):
+    """Returns (logits (B,S,V) f32, aux_losses dict)."""
+    x, positions = _assemble(batch, params, cfg, ctx)
+    cond = batch.get("cond_embeds")
+    if cond is not None:
+        cond = cond.astype(x.dtype)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio"):
+        apply = functools.partial(_dense_layer_apply, cfg=cfg, ctx=ctx,
+                                  positions=positions, window=window,
+                                  cond=cond, kernel=kernel)
+        if unroll:
+            for i in range(cfg.n_layers):
+                x = apply(x, _tree_slice(params["layers"], i))
+        else:
+            x, _ = jax.lax.scan(lambda h, p: (apply(h, p), None),
+                                x, params["layers"])
+    elif fam == "moe":
+        dense_cfg = dataclasses.replace(cfg, family="dense",
+                                        cross_attention=False)
+        for p in params["dense_layers"]:
+            x = _dense_layer_apply(x, p, cfg=dense_cfg, ctx=ctx,
+                                   positions=positions, window=window,
+                                   cond=None, kernel=kernel)
+        apply = functools.partial(_moe_layer_apply, cfg=cfg, ctx=ctx,
+                                  positions=positions, window=window,
+                                  kernel=kernel)
+        if unroll:
+            for i in range(cfg.n_layers - cfg.first_dense):
+                x, aux = apply(x, _tree_slice(params["layers"], i))
+                aux_total += aux
+        else:
+            def body(carry, p):
+                h, acc = carry
+                h, aux = apply(h, p)
+                return (h, acc + aux), None
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), params["layers"])
+    elif fam == "ssm":
+        x = _xlstm_stack(x, params, cfg, ctx, unroll)
+    elif fam == "hybrid":
+        x = _hybrid_stack(x, params, cfg, ctx, positions, window, unroll,
+                          kernel)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], ctx)
+    return logits, {"moe_aux": aux_total}
+
+
+def _xlstm_stack(x, params, cfg, ctx, unroll):
+    if cfg.slstm_every:
+        def group(h, gp):
+            for i in range(cfg.slstm_every - 1):
+                mp = _tree_slice(gp["mlstm"], i)
+                np_ = _tree_slice(gp["norms_m"], i)
+                h = h + xlstm_mod.mlstm_forward(
+                    rmsnorm(h, np_, cfg.norm_eps), mp, cfg, ctx)
+            h = h + xlstm_mod.slstm_forward(
+                rmsnorm(h, gp["norms_s"], cfg.norm_eps), gp["slstm"], cfg, ctx)
+            return h
+        g = cfg.n_layers // cfg.slstm_every
+        if unroll:
+            for i in range(g):
+                x = group(x, _tree_slice(params["groups"], i))
+        else:
+            x, _ = jax.lax.scan(lambda h, gp: (group(h, gp), None),
+                                x, params["groups"])
+        if params.get("rem") is not None:
+            rem = params["rem"]
+            for i in range(jax.tree.leaves(rem["mlstm"])[0].shape[0]):
+                x = x + xlstm_mod.mlstm_forward(
+                    rmsnorm(x, _tree_slice(rem["norms"], i), cfg.norm_eps),
+                    _tree_slice(rem["mlstm"], i), cfg, ctx)
+    else:
+        def body(h, p_and_n):
+            p, n = p_and_n
+            return h + xlstm_mod.mlstm_forward(
+                rmsnorm(h, n, cfg.norm_eps), p, cfg, ctx), None
+        if unroll:
+            for i in range(cfg.n_layers):
+                x, _ = body(x, (_tree_slice(params["layers"], i),
+                                _tree_slice(params["norms"], i)))
+        else:
+            x, _ = jax.lax.scan(body, x, (params["layers"], params["norms"]))
+    return x
+
+
+def _hybrid_stack(x, params, cfg, ctx, positions, window, unroll, kernel):
+    sa = params["shared_attn"]
+
+    def shared_block(h):
+        a = attn.gqa_forward(rmsnorm(h, sa["norm"], cfg.norm_eps), sa["attn"],
+                             cfg, ctx, positions=positions, window=window,
+                             kernel=kernel)
+        return h + a
+
+    def group(h, gp):
+        h = shared_block(h)
+        for i in range(cfg.attn_every):
+            h = h + ssm_mod.ssm_forward(
+                rmsnorm(h, _tree_slice(gp["norms"], i), cfg.norm_eps),
+                _tree_slice(gp["ssm"], i), cfg, ctx)
+        return h
+
+    g = cfg.n_layers // cfg.attn_every
+    if unroll:
+        for i in range(g):
+            x = group(x, _tree_slice(params["groups"], i))
+    else:
+        x, _ = jax.lax.scan(lambda h, gp: (group(h, gp), None),
+                            x, params["groups"])
+    if params.get("rem") is not None:
+        x = shared_block(x)
+        rem = params["rem"]
+        for i in range(jax.tree.leaves(rem["ssm"])[0].shape[0]):
+            x = x + ssm_mod.ssm_forward(
+                rmsnorm(x, _tree_slice(rem["norms"], i), cfg.norm_eps),
+                _tree_slice(rem["ssm"], i), cfg, ctx)
+    return x
+
+
+# ===========================================================================
+# Loss / train objective
+# ===========================================================================
+def lm_loss(params, batch, cfg: ModelConfig, ctx: ShardCtx = ShardCtx(), *,
+            window: int = 0, unroll: bool = False, kernel: str = "jnp"):
+    logits, aux = forward(params, batch, cfg, ctx, window=window,
+                          unroll=unroll, kernel=kernel)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # loss only over the text region (vision prefix has no labels)
+        logits = logits[:, cfg.n_vision_tokens:]
+    ce = softmax_cross_entropy(logits, labels)
+    return ce + cfg.router_aux_coef * aux["moe_aux"], {
+        "ce": ce, "moe_aux": aux["moe_aux"]}
+
+
+# ===========================================================================
+# Cache init / prefill / decode
+# ===========================================================================
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               window: int = 0):
+    """Abstract-friendly cache construction (works under eval_shape)."""
+    dtype = _dtype(cfg)
+    kv_len = min(cache_len, window) if window else cache_len
+    fam = cfg.family
+
+    def attn_cache():
+        if cfg.attn_type == "mla":
+            return attn.mla_init_cache(cfg, batch, kv_len, dtype)
+        return attn.gqa_init_cache(cfg, batch, kv_len, dtype)
+
+    if fam in ("dense", "vlm", "audio"):
+        def one(_):
+            c = {"kv": attn_cache()}
+            if cfg.cross_attention:
+                c["cross_kv"] = {
+                    "k": jnp.zeros((batch, cfg.n_cond_tokens, cfg.n_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((batch, cfg.n_cond_tokens, cfg.n_heads,
+                                    cfg.head_dim), dtype)}
+            return c
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+    if fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense
+        return {
+            "dense_layers": [{"kv": attn_cache()}
+                             for _ in range(cfg.first_dense)],
+            "layers": jax.vmap(lambda _: {"kv": attn_cache()})(
+                jnp.arange(n_moe)),
+        }
+    if fam == "ssm":
+        if cfg.slstm_every:
+            g = cfg.n_layers // cfg.slstm_every
+            rem = cfg.n_layers - g * cfg.slstm_every
+            c = {"groups": jax.vmap(lambda _: {
+                "mlstm": jax.vmap(lambda __: xlstm_mod.mlstm_init_cache(
+                    cfg, batch, dtype))(jnp.arange(cfg.slstm_every - 1)),
+                "slstm": xlstm_mod.slstm_init_cache(cfg, batch, dtype),
+            })(jnp.arange(g))}
+            c["rem"] = jax.vmap(lambda _: xlstm_mod.mlstm_init_cache(
+                cfg, batch, dtype))(jnp.arange(rem)) if rem else None
+            return c
+        return {"layers": jax.vmap(lambda _: xlstm_mod.mlstm_init_cache(
+            cfg, batch, dtype))(jnp.arange(cfg.n_layers))}
+    if fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers - g * cfg.attn_every
+        c = {"groups": jax.vmap(lambda _: {
+            "attn_kv": attn.gqa_init_cache(cfg, batch, kv_len, dtype),
+            "ssm": jax.vmap(lambda __: ssm_mod.ssm_init_cache(
+                cfg, batch, dtype))(jnp.arange(cfg.attn_every)),
+        })(jnp.arange(g))}
+        if rem:
+            c["rem"] = {
+                "attn_kv": attn.gqa_init_cache(cfg, batch, kv_len, dtype),
+                "ssm": jax.vmap(lambda _: ssm_mod.ssm_init_cache(
+                    cfg, batch, dtype))(jnp.arange(rem)),
+            }
+        else:
+            c["rem"] = None
+        return c
+    raise ValueError(fam)
+
+
+def decode_step(params, cache, batch, pos, cfg: ModelConfig,
+                ctx: ShardCtx = ShardCtx(), *, window: int = 0,
+                unroll: bool = False):
+    """One-token step.  batch: {"tokens": (B,1)}.  Returns (logits, cache)."""
+    x = embed(batch["tokens"], params["embed"], ctx)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio"):
+        dec = functools.partial(_dense_layer_decode, pos=pos, cfg=cfg, ctx=ctx,
+                                window=window, cond_kv=None)
+        if unroll:
+            new_layers = []
+            for i in range(cfg.n_layers):
+                x, c = dec(x, _tree_slice(params["layers"], i),
+                           _tree_slice(cache["layers"], i))
+                new_layers.append(c)
+            cache = {"layers": jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_layers)}
+        else:
+            def body(h, pc):
+                p, c = pc
+                h, c = dec(h, p, c)
+                return h, c
+            x, new_c = jax.lax.scan(body, x, (params["layers"],
+                                              cache["layers"]))
+            cache = {"layers": new_c}
+    elif fam == "moe":
+        dense_cfg = dataclasses.replace(cfg, family="dense",
+                                        cross_attention=False)
+        new_dense = []
+        for p, c in zip(params["dense_layers"], cache["dense_layers"]):
+            x, c = _dense_layer_decode(x, p, c, pos, dense_cfg, ctx,
+                                       window=window, cond_kv=None)
+            new_dense.append(c)
+        dec = functools.partial(_moe_layer_decode, pos=pos, cfg=cfg, ctx=ctx,
+                                window=window)
+        if unroll:
+            new_layers = []
+            for i in range(cfg.n_layers - cfg.first_dense):
+                x, c = dec(x, _tree_slice(params["layers"], i),
+                           _tree_slice(cache["layers"], i))
+                new_layers.append(c)
+            new_c = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+        else:
+            def body(h, pc):
+                p, c = pc
+                h, c = dec(h, p, c)
+                return h, c
+            x, new_c = jax.lax.scan(body, x, (params["layers"],
+                                              cache["layers"]))
+        cache = {"dense_layers": new_dense, "layers": new_c}
+    elif fam == "ssm":
+        x, cache = _xlstm_decode(x, params, cache, cfg, ctx, unroll)
+    elif fam == "hybrid":
+        x, cache = _hybrid_decode(x, params, cache, pos, cfg, ctx, window,
+                                  unroll)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"], ctx)
+    return logits, cache
+
+
+def _xlstm_decode(x, params, cache, cfg, ctx, unroll):
+    if cfg.slstm_every:
+        def group(h, gp, gc):
+            new_m = []
+            for i in range(cfg.slstm_every - 1):
+                o, c = xlstm_mod.mlstm_decode(
+                    rmsnorm(h, _tree_slice(gp["norms_m"], i), cfg.norm_eps),
+                    _tree_slice(gp["mlstm"], i),
+                    _tree_slice(gc["mlstm"], i), cfg, ctx)
+                h = h + o
+                new_m.append(c)
+            o, sc = xlstm_mod.slstm_decode(
+                rmsnorm(h, gp["norms_s"], cfg.norm_eps), gp["slstm"],
+                gc["slstm"], cfg, ctx)
+            h = h + o
+            return h, {"mlstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+                       "slstm": sc}
+        g = cfg.n_layers // cfg.slstm_every
+        if unroll:
+            new_g = []
+            for i in range(g):
+                x, c = group(x, _tree_slice(params["groups"], i),
+                             _tree_slice(cache["groups"], i))
+                new_g.append(c)
+            new_groups = jax.tree.map(lambda *xs: jnp.stack(xs), *new_g)
+        else:
+            def body(h, pc):
+                gp, gc = pc
+                h, c = group(h, gp, gc)
+                return h, c
+            x, new_groups = jax.lax.scan(
+                body, x, (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups, "rem": None}
+        if params.get("rem") is not None:
+            rem = params["rem"]
+            new_r = []
+            for i in range(jax.tree.leaves(rem["mlstm"])[0].shape[0]):
+                o, c = xlstm_mod.mlstm_decode(
+                    rmsnorm(x, _tree_slice(rem["norms"], i), cfg.norm_eps),
+                    _tree_slice(rem["mlstm"], i),
+                    _tree_slice(cache["rem"], i), cfg, ctx)
+                x = x + o
+                new_r.append(c)
+            new_cache["rem"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_r)
+        return x, new_cache
+    def body(h, pnc):
+        p, n, c = pnc
+        o, c = xlstm_mod.mlstm_decode(rmsnorm(h, n, cfg.norm_eps), p, c,
+                                      cfg, ctx)
+        return h + o, c
+    if unroll:
+        new_l = []
+        for i in range(cfg.n_layers):
+            x, c = body(x, (_tree_slice(params["layers"], i),
+                            _tree_slice(params["norms"], i),
+                            _tree_slice(cache["layers"], i)))
+            new_l.append(c)
+        return x, {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *new_l)}
+    x, new_c = jax.lax.scan(body, x, (params["layers"], params["norms"],
+                                      cache["layers"]))
+    return x, {"layers": new_c}
+
+
+def _hybrid_decode(x, params, cache, pos, cfg, ctx, window, unroll):
+    sa = params["shared_attn"]
+
+    def shared_block(h, kv):
+        a, kv = attn.gqa_decode(rmsnorm(h, sa["norm"], cfg.norm_eps),
+                                sa["attn"], kv, pos, cfg, ctx, window=window)
+        return h + a, kv
+
+    def group(h, gp, gc):
+        h, akv = shared_block(h, gc["attn_kv"])
+        new_s = []
+        for i in range(cfg.attn_every):
+            o, c = ssm_mod.ssm_decode(
+                rmsnorm(h, _tree_slice(gp["norms"], i), cfg.norm_eps),
+                _tree_slice(gp["ssm"], i), _tree_slice(gc["ssm"], i), cfg, ctx)
+            h = h + o
+            new_s.append(c)
+        return h, {"attn_kv": akv,
+                   "ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_s)}
+
+    g = cfg.n_layers // cfg.attn_every
+    if unroll:
+        new_g = []
+        for i in range(g):
+            x, c = group(x, _tree_slice(params["groups"], i),
+                         _tree_slice(cache["groups"], i))
+            new_g.append(c)
+        new_groups = jax.tree.map(lambda *xs: jnp.stack(xs), *new_g)
+    else:
+        def body(h, pc):
+            gp, gc = pc
+            h, c = group(h, gp, gc)
+            return h, c
+        x, new_groups = jax.lax.scan(body, x,
+                                     (params["groups"], cache["groups"]))
+    new_cache = {"groups": new_groups, "rem": None}
+    if params.get("rem") is not None:
+        rem = params["rem"]
+        rc = cache["rem"]
+        x, akv = shared_block(x, rc["attn_kv"])
+        new_s = []
+        for i in range(jax.tree.leaves(rem["ssm"])[0].shape[0]):
+            o, c = ssm_mod.ssm_decode(
+                rmsnorm(x, _tree_slice(rem["norms"], i), cfg.norm_eps),
+                _tree_slice(rem["ssm"], i), _tree_slice(rc["ssm"], i),
+                cfg, ctx)
+            x = x + o
+            new_s.append(c)
+        new_cache["rem"] = {
+            "attn_kv": akv,
+            "ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_s)}
+    return x, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx = ShardCtx(), *,
+            window: int = 0, unroll: bool = False, kernel: str = "jnp"):
+    """Prefill = full forward producing logits.
+
+    A production serving system would also materialize the KV cache during
+    prefill; for the dry-run the prefill cost is the forward itself and the
+    decode shapes take the cache as an input (steady state), so this returns
+    logits only.  ``examples/split_inference.py`` demonstrates cache-building
+    prefill at demo scale via ``decode_step`` chaining.
+    """
+    logits, _ = forward(params, batch, cfg, ctx, window=window, unroll=unroll,
+                        kernel=kernel)
+    return logits

@@ -1,0 +1,244 @@
+"""xLSTM blocks: chunked-parallel mLSTM and sequential sLSTM.
+
+Fidelity note (recorded in DESIGN.md): the mLSTM here uses the xLSTM matrix
+memory recurrence  C_t = f_t·C_{t-1} + i_t·(v_t k_tᵀ),  h_t = o_t ⊙ (C_t q_t)/
+max(|n_t q_t|, 1) with *sigmoid* input/forget gates in a chunked parallel form
+(GLA-style).  The paper's exponential input gate + max-stabilizer is a
+numerical-stabilization detail orthogonal to the systems behaviour (identical
+recurrence structure, FLOPs and memory traffic); the sLSTM keeps the paper's
+exponential gating + stabilizer state since it is sequential anyway.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx, dense_init, rmsnorm, shard, split_keys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    ks = split_keys(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, di), d, dtype=dtype),
+        "w_gate_up": dense_init(ks[1], (d, di), d, dtype=dtype),
+        "w_q": dense_init(ks[2], (di, di), di, dtype=dtype),
+        "w_k": dense_init(ks[3], (di, di), di, dtype=dtype),
+        "w_v": dense_init(ks[4], (di, di), di, dtype=dtype),
+        "w_i": dense_init(ks[5], (di, nh), di, dtype=jnp.float32),
+        "w_f": dense_init(ks[6], (di, nh), di, dtype=jnp.float32),
+        "f_bias": 3.0 * jnp.ones((nh,), jnp.float32),   # forget-gate bias ~1
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[7], (di, d), di, dtype=dtype),
+    }
+
+
+def _mlstm_chunk_len(s: int) -> int:
+    c = min(s, 256)
+    while s // c > 32:
+        c *= 2
+    return c
+
+
+def mlstm_forward(x, p, cfg: ModelConfig, ctx: ShardCtx):
+    """x: (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    di = 2 * d
+    nh = cfg.n_heads
+    hd = di // nh
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    g = jnp.einsum("bsd,de->bse", x, p["w_gate_up"],
+                   preferred_element_type=jnp.float32)
+    q = jnp.einsum("bse,ef->bsf", u, p["w_q"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bse,ef->bsf", u, p["w_k"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bse,ef->bsf", u, p["w_v"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    ig = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_i"]))
+    fg = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_f"])
+                        + p["f_bias"])
+    q = q.reshape(b, s, nh, hd) * (hd ** -0.5)
+    kh = k.reshape(b, s, nh, hd)
+    vh = v.reshape(b, s, nh, hd)
+    q = shard(q, ctx, "batch", None, "model", None)
+    kh = shard(kh, ctx, "batch", None, "model", None)
+    vh = shard(vh, ctx, "batch", None, "model", None)
+
+    l = _mlstm_chunk_len(s)
+    nc = s // l
+    state = jnp.zeros((b, nh, hd, hd), jnp.float32)            # k ⊗ v memory
+    norm = jnp.zeros((b, nh, hd), jnp.float32)                 # key normalizer
+    outs = []
+    for c in range(nc):
+        sl = slice(c * l, (c + 1) * l)
+        qc = q[:, sl].astype(jnp.float32)                      # (B,L,nh,hd)
+        kc = kh[:, sl].astype(jnp.float32)
+        vc = vh[:, sl].astype(jnp.float32)
+        ic = ig[:, sl]                                         # (B,L,nh)
+        fc = fg[:, sl]
+        logf = jnp.log(jnp.maximum(fc, 1e-9))
+        cum = jnp.cumsum(logf, axis=1)                         # inclusive
+        # intra-chunk: weight(t,s) = exp(cum_t - cum_s) * i_s  for s<=t
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,t,s,nh)
+        tri = jnp.tril(jnp.ones((l, l), bool))
+        wts = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0) * \
+            ic[:, None, :, :]
+        sc = jnp.einsum("bthd,bshd->btsh", qc, kc)             # (B,t,s,nh)
+        y = jnp.einsum("btsh,bshp->bthp", sc * wts, vc)
+        # inter-chunk from carried state
+        y = y + jnp.einsum("bthd,bhdp->bthp", qc, state) * \
+            jnp.exp(cum)[..., None]
+        # normalizer: n_t = q_t · (Σ_s w(t,s) k_s + carried norm state)
+        nvec = jnp.einsum("btsh,bshd,bthd->bth", wts, kc, qc) + \
+            jnp.einsum("bthd,bhd->bth", qc, norm) * jnp.exp(cum)
+        h = y / jnp.maximum(jnp.abs(nvec), 1.0)[..., None]
+        outs.append(h)
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)              # (B,L,nh)
+        wstate = (ic * decay_end)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + \
+            jnp.einsum("bshd,bshp->bhdp", kc * wstate[..., None], vc)
+        norm = norm * jnp.exp(cum[:, -1])[:, :, None] + \
+            jnp.einsum("bshd,bsh->bhd", kc, wstate)
+    h = jnp.concatenate(outs, axis=1).reshape(b, s, di)
+    h = rmsnorm(h.astype(x.dtype), {"scale": p["norm_scale"]}, cfg.norm_eps)
+    h = h * jax.nn.silu(g).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_down"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    hd = di // nh
+    return {
+        "state": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "norm": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(x, p, cache, cfg: ModelConfig, ctx: ShardCtx):
+    b = x.shape[0]
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    hd = di // nh
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)[:, 0]
+    g = jnp.einsum("bsd,de->bse", x, p["w_gate_up"],
+                   preferred_element_type=jnp.float32)[:, 0]
+    q = jnp.einsum("be,ef->bf", u, p["w_q"],
+                   preferred_element_type=jnp.float32).reshape(b, nh, hd) * (hd ** -0.5)
+    k = jnp.einsum("be,ef->bf", u, p["w_k"],
+                   preferred_element_type=jnp.float32).reshape(b, nh, hd)
+    v = jnp.einsum("be,ef->bf", u, p["w_v"],
+                   preferred_element_type=jnp.float32).reshape(b, nh, hd)
+    ig = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"])      # (B,nh)
+    fg = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_f"] + p["f_bias"])
+    state = cache["state"] * fg[:, :, None, None] + \
+        ig[:, :, None, None] * jnp.einsum("bhd,bhp->bhdp", k, v)
+    norm = cache["norm"] * fg[:, :, None] + ig[:, :, None] * k
+    y = jnp.einsum("bhd,bhdp->bhp", q, state)
+    nv = jnp.einsum("bhd,bhd->bh", q, norm)
+    h = (y / jnp.maximum(jnp.abs(nv), 1.0)[..., None]).reshape(b, di)
+    h = rmsnorm(h.astype(x.dtype), {"scale": p["norm_scale"]}, cfg.norm_eps)
+    h = h * jax.nn.silu(g).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", h, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out[:, None], {"state": state, "norm": norm}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = split_keys(key, 10)
+    p = {"b": jnp.zeros((4, d), jnp.float32),
+         "norm_scale": jnp.ones((d,), dtype),
+         "w_up": dense_init(ks[8], (d, 2 * d), d, dtype=dtype),
+         "w_down": dense_init(ks[9], (2 * d, d), 2 * d, dtype=dtype)}
+    for i, name in enumerate(["i", "f", "z", "o"]):
+        p[f"w_{name}"] = dense_init(ks[i], (d, d), d, dtype=dtype)
+        p[f"r_{name}"] = dense_init(ks[4 + i], (d, d), d, dtype=dtype)
+    return p
+
+
+def _slstm_step(p, carry, xt):
+    """xt: (B,d) f32 pre-projected gate inputs stacked (4,B,d)."""
+    c, n, h, m = carry
+    wi, wf, wz, wo = xt
+    it = wi + h @ p["r_i"].astype(jnp.float32)
+    ft = wf + h @ p["r_f"].astype(jnp.float32)
+    zt = jnp.tanh(wz + h @ p["r_z"].astype(jnp.float32))
+    ot = jax.nn.sigmoid(wo + h @ p["r_o"].astype(jnp.float32))
+    m_new = jnp.maximum(ft + m, it)                 # stabilizer (log space)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c = f_ * c + i_ * zt
+    n = f_ * n + i_
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_forward(x, p, cfg: ModelConfig, ctx: ShardCtx):
+    """Sequential recurrence via lax.scan over time.
+
+    Roofline note: XLA counts the scan body once; sLSTM FLOPs are accounted
+    analytically (ModelConfig._slstm_flops_per_token).
+    """
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    pre = jnp.stack([
+        xf @ p["w_i"].astype(jnp.float32) + p["b"][0],
+        xf @ p["w_f"].astype(jnp.float32) + p["b"][1],
+        xf @ p["w_z"].astype(jnp.float32) + p["b"][2],
+        xf @ p["w_o"].astype(jnp.float32) + p["b"][3],
+    ])                                              # (4,B,S,d)
+    z0 = jnp.zeros((b, d), jnp.float32)
+    carry = (z0, z0, z0, jnp.full((b, d), -1e9, jnp.float32))
+    (c, n, h, m), hs = jax.lax.scan(
+        lambda cr, xt: _slstm_step(p, cr, xt),
+        carry, jnp.moveaxis(pre, 2, 0))             # scan over S: (S,4,B,d)
+    hs = jnp.moveaxis(hs, 0, 1)                     # (B,S,d)
+    hs = rmsnorm(hs.astype(x.dtype), {"scale": p["norm_scale"]}, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", hs, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    u = jax.nn.gelu(u).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", u, p["w_down"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e9, jnp.float32)}
+
+
+def slstm_decode(x, p, cache, cfg: ModelConfig, ctx: ShardCtx):
+    xf = x.astype(jnp.float32)[:, 0]
+    pre = jnp.stack([
+        xf @ p["w_i"].astype(jnp.float32) + p["b"][0],
+        xf @ p["w_f"].astype(jnp.float32) + p["b"][1],
+        xf @ p["w_z"].astype(jnp.float32) + p["b"][2],
+        xf @ p["w_o"].astype(jnp.float32) + p["b"][3],
+    ])
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), hs = _slstm_step(p, carry, pre)
+    hs = rmsnorm(hs.astype(x.dtype), {"scale": p["norm_scale"]}, cfg.norm_eps)
+    u = jnp.einsum("bd,de->be", hs, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    u = jax.nn.gelu(u).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", u, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out[:, None], {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,49 @@
+"""LR schedules: cosine, and WSD (warmup-stable-decay) from MiniCPM
+[arXiv:2404.06395] — selected by the minicpm-2b config."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def cosine(total_steps: int, warmup: int = 0, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn
+
+
+def wsd(total_steps: int, warmup_frac: float = 0.01, decay_frac: float = 0.1,
+        final_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, long stable plateau at peak lr,
+    short exponential-ish (here linear) decay tail (MiniCPM §4)."""
+    warmup = max(1, int(total_steps * warmup_frac))
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / warmup, 1.0)
+        decay = jnp.where(
+            s <= decay_start, 1.0,
+            1.0 - (1 - final_frac) * jnp.clip(
+                (s - decay_start) / jnp.maximum(total_steps - decay_start, 1),
+                0.0, 1.0))
+        return warm * decay
+    return fn
+
+
+def get_schedule(name: str, total_steps: int, **kw):
+    if name == "constant":
+        return constant()
+    if name == "cosine":
+        return cosine(total_steps, **kw)
+    if name == "wsd":
+        return wsd(total_steps, **kw)
+    raise ValueError(name)

@@ -1,0 +1,188 @@
+"""Parameter / cache / batch PartitionSpec rules.
+
+Rules are keyed by the leaf's dict key (parameter names are globally unique by
+construction in ``repro.models``).  Each rule gives the spec for the *base*
+(unstacked) rank; leading layer-stack dimensions (scan stacks, group stacks)
+are padded with ``None`` automatically.  Any dim whose size does not divide
+the product of its assigned mesh axes is demoted to replicated — this is how
+e.g. qwen2-vl's 12 heads or a batch of 1 degrade gracefully on a 16-way axis
+(see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx
+
+M = "model"
+B = "batch"
+
+# leaf name -> (base_rank, base_spec) — specs use logical tags resolved by ctx
+_PARAM_RULES = {
+    # embeddings
+    "embedding": (2, (M, None)),
+    "lm_head": (2, (None, M)),
+    # attention (GQA)
+    "wq": (3, (None, M, None)),
+    "wk": (3, (None, M, None)),
+    "wv": (3, (None, M, None)),
+    "wo": (3, (M, None, None)),
+    # MLA
+    "w_dkv": (2, (None, None)),
+    "w_krope": (2, (None, None)),
+    "w_uk": (3, (None, M, None)),
+    "w_uv": (3, (None, M, None)),
+    "w_dq": (2, (None, None)),
+    "w_uq": (3, (None, M, None)),
+    # dense mlp / moe shared expert
+    "w_gate": (2, (None, M)),
+    "w_up": (2, (None, M)),
+    "w_down": (2, (M, None)),
+    # moe (expert-stacked weights carry their own leading E dim)
+    "router": (2, (None, None)),
+    "moe:w_gate": (3, (M, None, None)),
+    "moe:w_up": (3, (M, None, None)),
+    "moe:w_down": (3, (M, None, None)),
+    # mamba2
+    "w_z": (2, (None, M)),
+    "w_x": (2, (None, M)),
+    "w_B": (2, (None, None)),
+    "w_C": (2, (None, None)),
+    "w_dt": (2, (None, M)),
+    "dt_bias": (1, (M,)),
+    "conv_w": (2, (None, M)),
+    "conv_b": (1, (M,)),
+    "A_log": (1, (M,)),
+    "D": (1, (M,)),
+    "norm_scale": (1, (M,)),
+    "w_out": (2, (M, None)),
+    # xlstm (small model: replicated)
+    "w_q": (2, (None, None)),
+    "w_k": (2, (None, None)),
+    "w_v": (2, (None, None)),
+    "w_i": (2, (None, None)),
+    "w_f": (2, (None, None)),
+    "f_bias": (1, (None,)),
+    "w_gate_up": (2, (None, M)),
+    "b": (2, (None, None)),
+    "r_i": (2, (None, None)),
+    "r_f": (2, (None, None)),
+    "r_z": (2, (None, None)),
+    "r_o": (2, (None, None)),
+    "w_z_xl": (2, (None, None)),
+    "w_o": (2, (None, None)),
+    # norms
+    "scale": (1, (None,)),
+}
+
+_CACHE_RULES = {
+    "k": (4, (B, None, M, None)),
+    "v": (4, (B, None, M, None)),
+    "c_kv": (3, (B, None, None)),
+    "k_rope": (3, (B, None, None)),
+    "state": (4, (B, M, None, None)),     # ssm / mlstm state (B,nh,·,·)
+    "conv": (3, (B, None, M)),
+    "norm": (3, (B, M, None)),            # mlstm normalizer
+    "c": (2, (B, None)),
+    "n": (2, (B, None)),
+    "h": (2, (B, None)),
+    "m": (2, (B, None)),
+}
+
+
+def _axis_size(ctx: ShardCtx, tag) -> int:
+    if tag is None:
+        return 1
+    axes = ctx.resolve(tag)
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _fit_spec(shape, base_rank, base_spec, ctx: ShardCtx,
+              fsdp: bool = False, fsdp_axis: str = "data"):
+    lead = len(shape) - base_rank
+    if lead < 0:  # rank mismatch (e.g. scalar) -> replicate
+        return P()
+    spec = [None] * lead + list(base_spec)
+    # demote non-divisible dims
+    for i, tag in enumerate(spec):
+        if tag is not None and shape[i] % _axis_size(ctx, tag) != 0:
+            spec[i] = None
+    if fsdp:
+        fs = ctx.mesh.shape.get(fsdp_axis, 1) if ctx.mesh else 1
+        for i in range(lead, len(spec)):          # first shardable free dim
+            if spec[i] is None and shape[i] % fs == 0 and shape[i] >= fs:
+                spec[i] = fsdp_axis
+                break
+    return P(*[ctx.resolve(t) if t not in (None, fsdp_axis) else t
+               for t in spec])
+
+
+def _leaf_rule(path) -> Optional[tuple]:
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1] if keys else ""
+    if "moe" in keys and name in ("w_gate", "w_up", "w_down") and \
+            "shared" not in keys:
+        return _PARAM_RULES[f"moe:{name}"]
+    # xlstm block projections share names with attention-free rules
+    return _PARAM_RULES.get(name)
+
+
+def param_specs(params_abstract, ctx: ShardCtx, fsdp: bool = False):
+    """Tree of PartitionSpec matching an (abstract) param tree."""
+    def rule(path, leaf):
+        r = _leaf_rule(path)
+        if r is None:
+            return P()
+        return _fit_spec(leaf.shape, r[0], r[1], ctx, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(rule, params_abstract)
+
+
+# flash-decoding layout (§Perf lever, ctx.cache_seq_shard): KV cache sharded
+# over its SEQUENCE dim on the model axis; attention becomes a partial
+# softmax per shard + tiny LSE-combine collectives (inserted by SPMD).
+_CACHE_RULES_SEQSHARD = {
+    "k": (4, (B, M, None, None)),
+    "v": (4, (B, M, None, None)),
+    "c_kv": (3, (B, M, None)),
+    "k_rope": (3, (B, M, None)),
+}
+
+
+def cache_specs(cache_abstract, ctx: ShardCtx):
+    def rule(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        r = None
+        if ctx.cache_seq_shard:
+            r = _CACHE_RULES_SEQSHARD.get(name)
+        if r is None:
+            r = _CACHE_RULES.get(name)
+        if r is None:
+            return P()
+        return _fit_spec(leaf.shape, r[0], r[1], ctx)
+    return jax.tree_util.tree_map_with_path(rule, cache_abstract)
+
+
+def batch_specs(batch_abstract, ctx: ShardCtx):
+    """Input batches: leading dim is global batch -> batch axes (if divisible)."""
+    def rule(_path, leaf):
+        spec = [B] + [None] * (leaf.ndim - 1)
+        return _fit_spec(leaf.shape, leaf.ndim, spec, ctx)
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,15 @@
+import os
+
+# Tests run single-device (the dry-run forces 512 devices in its OWN process
+# only).  Keep CPU math deterministic-ish and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,181 @@
+"""CollaFuse core invariants: cut-plan algebra, protocol behaviour, privacy
+monotonicity, split-sampler composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collafuse, privacy
+from repro.core.collafuse import CutPlan
+from repro.core.trainer import CollaFuseTrainer, TrainerConfig
+from repro.diffusion import ddpm
+from repro.diffusion.schedule import cosine_schedule
+
+
+# ---------------------------------------------------------------------------
+# CutPlan algebra
+# ---------------------------------------------------------------------------
+def test_cutplan_extremes():
+    full_local = CutPlan(100, 1.0)           # paper's non-collaborative c=1
+    assert full_local.n_server_steps == 0
+    assert full_local.n_client_steps == 100
+    full_server = CutPlan(100, 0.0)
+    assert full_server.n_server_steps == 100
+    assert full_server.n_client_steps == 0
+
+
+@pytest.mark.parametrize("c", [0.0, 0.2, 0.4, 0.6, 0.8, 1.0])
+def test_cutplan_partition(c):
+    """Server + client steps always partition the chain exactly."""
+    plan = CutPlan(100, c)
+    assert plan.n_server_steps + plan.n_client_steps == 100
+    lo_s, hi_s = plan.server_range
+    lo_c, hi_c = plan.client_range
+    if plan.n_server_steps and plan.n_client_steps:
+        assert lo_s == hi_c + 1              # contiguous, non-overlapping
+
+
+def test_cutplan_paper_example():
+    """Paper §3: T=100, c=0.8 -> 20 server steps, 80 local steps."""
+    plan = CutPlan(100, 0.8)
+    assert plan.n_server_steps == 20
+    assert plan.n_client_steps == 80
+
+
+def test_monotone_energy_split():
+    """H2c: decreasing c monotonically decreases client compute share."""
+    fracs = [collafuse.flops_split(CutPlan(100, c), 1e9, 8)["client_fraction"]
+             for c in (1.0, 0.8, 0.6, 0.4, 0.2, 0.0)]
+    assert all(a > b for a, b in zip(fracs, fracs[1:])), fracs
+
+
+# ---------------------------------------------------------------------------
+# Protocol pieces
+# ---------------------------------------------------------------------------
+def test_server_batch_range_and_no_x0_leak(rng):
+    sched = cosine_schedule(100)
+    plan = CutPlan(100, 0.8)
+    x0 = jnp.ones((32, 8, 8, 1))
+    up = collafuse.make_server_batch(sched, plan, rng, x0)
+    t = np.asarray(up["t"])
+    assert t.min() >= 81 and t.max() <= 100     # server range only
+    assert set(up) == {"x_t", "t", "eps"}       # x_0 never leaves the client
+    # at these timesteps the upload is noise-dominated
+    corr = np.corrcoef(np.asarray(up["x_t"]).ravel(),
+                       np.asarray(up["eps"]).ravel())[0, 1]
+    assert corr > 0.9
+
+
+def test_split_sample_composes_to_full_chain(rng):
+    """Server(T..t_c+1) ∘ client(t_c..1) with the SAME model and stream keys
+    == a property of the split sampler: number of executed steps is T."""
+    sched = cosine_schedule(40)
+    calls = []
+
+    def model_fn(x, t):
+        calls.append(1)
+        return jnp.zeros_like(x)
+
+    plan = CutPlan(40, 0.75)
+    collafuse.split_sample(sched, plan, model_fn, model_fn, rng, (2, 8))
+    # fori_loop traces once; verify step counts by plan instead
+    assert plan.n_server_steps == 10 and plan.n_client_steps == 30
+
+
+@pytest.mark.parametrize("c", [0.0, 1.0])
+def test_split_sample_degenerate_cuts(rng, c):
+    sched = cosine_schedule(20)
+    model_fn = lambda x, t: jnp.zeros_like(x)
+    plan = CutPlan(20, c)
+    out = collafuse.split_sample(sched, plan, model_fn, model_fn, rng, (2, 8))
+    assert out.shape == (2, 8)
+    assert jnp.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# Privacy metrics
+# ---------------------------------------------------------------------------
+def test_kid_near_zero_for_identical_sets(rng):
+    """The unbiased MMD^2 estimator has an O(1/m) negative bias on
+    identical sets (cross term keeps the diagonal, within terms drop it),
+    so assert |KID| is small relative to a genuinely-different pair rather
+    than exactly zero."""
+    fp = privacy.feature_params()
+    imgs = jax.random.normal(rng, (32, 16, 16, 1))
+    k_same = float(privacy.kid(fp, imgs, imgs))
+    other = jax.random.normal(jax.random.PRNGKey(7), (32, 16, 16, 1)) * 0.3 + 0.5
+    k_diff = float(privacy.kid(fp, imgs, other))
+    assert abs(k_same) < 1e-2
+    assert abs(k_same) < 0.1 * abs(k_diff)
+
+
+def test_kid_separates_distributions(rng):
+    fp = privacy.feature_params()
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (64, 16, 16, 1))
+    b = jax.random.normal(k2, (64, 16, 16, 1)) * 0.2 + 0.8
+    near = float(privacy.kid(fp, a, jax.random.normal(k2, (64, 16, 16, 1))))
+    far = float(privacy.kid(fp, a, b))
+    assert far > near
+
+
+def test_disclosure_increases_with_noise_level(rng):
+    """More noise left at the split (larger t_split) => more concealment.
+    This is the mechanism behind paper Fig. 3 right column."""
+    sched = cosine_schedule(100)
+    x0 = jax.random.normal(rng, (32, 16, 16, 1))
+    mses = []
+    for t_val in (10, 50, 90):
+        t = jnp.full((32,), t_val, jnp.int32)
+        eps = jax.random.normal(jax.random.PRNGKey(t_val), x0.shape)
+        xt = ddpm.q_sample(sched, x0, t, eps)
+        mses.append(float(privacy.mse_disclosure(x0, xt)))
+    assert mses[0] < mses[1] < mses[2], mses
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration (tiny)
+# ---------------------------------------------------------------------------
+def _tiny_trainer(c=0.8, T=10):
+    from repro.configs.base import UNetConfig
+    from repro.models import unet
+    ucfg = UNetConfig().reduced()
+    tcfg = TrainerConfig(n_clients=2, T=T, cut_ratio=c, lr=1e-3)
+    return CollaFuseTrainer(tcfg, lambda k: unet.init_params(k, ucfg),
+                            lambda p, x, t: unet.forward(p, x, t, ucfg)), ucfg
+
+
+def test_trainer_round_updates_both_sides(rng):
+    tr, ucfg = _tiny_trainer()
+    x = jax.random.normal(rng, (2, 4, ucfg.image_size, ucfg.image_size, 1))
+    before_s = jax.tree.leaves(tr.server_params)[0].copy()
+    before_c = jax.tree.leaves(tr.client_params[0])[0].copy()
+    m = tr.train_round([x[0], x[1]])
+    assert np.isfinite(m["server_loss"])
+    assert np.isfinite(m["client_loss_mean"])
+    assert not jnp.allclose(jax.tree.leaves(tr.server_params)[0], before_s)
+    assert not jnp.allclose(jax.tree.leaves(tr.client_params[0])[0], before_c)
+
+
+def test_trainer_c1_is_fully_local(rng):
+    tr, ucfg = _tiny_trainer(c=1.0)
+    x = jax.random.normal(rng, (2, 4, ucfg.image_size, ucfg.image_size, 1))
+    before_s = jax.tree.leaves(tr.server_params)[0].copy()
+    m = tr.train_round([x[0], x[1]])
+    # server untouched at c=1 (paper's local baseline)
+    assert jnp.allclose(jax.tree.leaves(tr.server_params)[0], before_s)
+    assert "server_loss" not in m
+    assert m["client_fraction"] == pytest.approx(1.0, abs=1e-6)
+
+
+def test_trainer_clients_stay_private(rng):
+    """Client models must differ after training on different data."""
+    tr, ucfg = _tiny_trainer()
+    k1, k2 = jax.random.split(rng)
+    xa = jax.random.normal(k1, (4, ucfg.image_size, ucfg.image_size, 1))
+    xb = jax.random.normal(k2, (4, ucfg.image_size, ucfg.image_size, 1)) + 2.0
+    for _ in range(2):
+        tr.train_round([xa, xb])
+    pa = jax.tree.leaves(tr.client_params[0])[0]
+    pb = jax.tree.leaves(tr.client_params[1])[0]
+    assert not jnp.allclose(pa, pb)

@@ -1,0 +1,97 @@
+"""Config registry + analytic accounting sanity."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs
+
+EXPECTED = {
+    "qwen2-vl-2b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                        d_ff=8960, vocab_size=151_936),
+    "granite-3-8b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+                         d_ff=12800, vocab_size=49_155),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                            n_kv_heads=8, d_ff_expert=2048,
+                            vocab_size=163_840, n_experts=384, top_k=8),
+    "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             d_ff_expert=1536, vocab_size=102_400,
+                             n_experts=160, top_k=6, kv_lora_rank=512,
+                             n_shared_experts=2),
+    "glm4-9b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+                    d_ff=13696, vocab_size=151_552),
+    "minicpm-2b": dict(n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+                       d_ff=5760, vocab_size=122_753),
+    "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32, d_ff=8192,
+                           vocab_size=2048),
+    "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, d_ff=14336,
+                      vocab_size=32_000, ssm_state=64),
+    "xlstm-125m": dict(n_layers=12, d_model=768, n_heads=4,
+                       vocab_size=50_304, d_ff=0),
+    "yi-6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                  d_ff=11008, vocab_size=64_000),
+}
+
+
+def test_all_archs_listed():
+    assert sorted(list_archs()) == sorted(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_config_values(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    assert cfg.source, arch
+
+
+# order-of-magnitude param counts vs public figures
+PARAM_BANDS = {
+    "qwen2-vl-2b": (1.0e9, 2.5e9),
+    "granite-3-8b": (6e9, 10e9),
+    "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+    "deepseek-v2-236b": (1.8e11, 2.8e11),
+    "glm4-9b": (7e9, 11e9),
+    "minicpm-2b": (2e9, 3.5e9),
+    "musicgen-large": (2e9, 4.5e9),
+    "zamba2-7b": (6e9, 9e9),
+    "xlstm-125m": (0.9e8, 2.2e8),
+    "yi-6b": (5e9, 7e9),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PARAM_BANDS))
+def test_param_count_band(arch):
+    n = get_config(arch).param_count()
+    lo, hi = PARAM_BANDS[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    act = kimi.active_param_count()
+    assert 2.5e10 <= act <= 4.5e10, act        # "a32b" ≈ 32B active
+    assert act < kimi.param_count() / 10
+
+
+def test_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert get_shape("train_4k").tokens == 4096 * 256
+    assert get_shape("long_500k").kind == "decode"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_configs_are_small(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.vocab_size <= 512
+    r.validate()
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_flops_positive_all_shapes(arch):
+    cfg = get_config(arch)
+    for s in (1, 4096):
+        f = cfg.flops_per_token_fwd(s)
+        # at least the lm head + one matmul per layer
+        assert f > 2 * cfg.d_model * cfg.vocab_size

@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.diffusion.schedule import cosine_schedule
+from repro.kernels import ref
+from repro.kernels.ddpm_step import ddpm_step, ddpm_step_coefs
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kv,hd,bq,bk", [
+    (1, 128, 4, 4, 32, 64, 64),       # MHA
+    (2, 256, 8, 2, 64, 128, 64),      # GQA g=4
+    (1, 512, 4, 1, 64, 128, 128),     # MQA
+    (2, 128, 2, 2, 128, 128, 128),    # single block
+    (1, 384, 6, 3, 64, 128, 128),     # non-pow2 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, s, h, kv, hd, bq, bk, dtype, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (b, s, h, hd), dtype)
+    k = jax.random.normal(k2, (b, s, kv, hd), dtype)
+    v = jax.random.normal(k3, (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bk)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    assert out.dtype == dtype
+    assert jnp.allclose(out.astype(jnp.float32),
+                        expected.astype(jnp.float32), atol=_tol(dtype)), \
+        float(jnp.abs(out.astype(jnp.float32) -
+                      expected.astype(jnp.float32)).max())
+
+
+@pytest.mark.parametrize("window", [32, 64, 200])
+def test_flash_attention_sliding_window(window, rng):
+    b, s, h, kv, hd = 2, 256, 4, 2, 64
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (b, s, h, hd))
+    k = jax.random.normal(k2, (b, s, kv, hd))
+    v = jax.random.normal(k3, (b, s, kv, hd))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_kv=64)
+    expected = ref.attention_ref(q, k, v, causal=True, window=window)
+    assert jnp.allclose(out, expected, atol=2e-5)
+
+
+def test_flash_attention_matches_model_blockwise(rng):
+    """Kernel ≡ the model's jnp blockwise path (used interchangeably)."""
+    from repro.models.attention import blockwise_attention
+    b, s, h, kv, hd = 2, 256, 8, 2, 64
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (b, s, h, hd))
+    k = jax.random.normal(k2, (b, s, kv, hd))
+    v = jax.random.normal(k3, (b, s, kv, hd))
+    a = flash_attention(q, k, v, causal=True)
+    bw = blockwise_attention(q, k, v, causal=True)
+    assert jnp.allclose(a, bw, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,nh,p,n,chunk,hb", [
+    (1, 64, 4, 16, 8, 16, 4),
+    (2, 128, 8, 32, 16, 32, 8),
+    (2, 96, 6, 16, 8, 32, 2),         # chunk not dividing heads evenly
+    (1, 256, 16, 64, 64, 128, 8),     # production-like tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_vs_recurrence(b, s, nh, p, n, chunk, hb, dtype, rng):
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n), dtype)
+    cm = jax.random.normal(ks[4], (b, s, n), dtype)
+    y = ssm_scan(x, dt, a, bm, cm, chunk=chunk, head_block=hb)
+    y_ref = ref.ssm_scan_ref(x, dt, a, bm, cm)
+    scale = float(jnp.abs(y_ref.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y.astype(jnp.float32) -
+                        y_ref.astype(jnp.float32)).max()) / scale
+    assert err < (5e-2 if dtype == jnp.bfloat16 else 1e-4), err
+
+
+def test_ssm_scan_state_continuity(rng):
+    """Chunked result must be independent of the chunk size."""
+    ks = jax.random.split(rng, 5)
+    b, s, nh, p, n = 1, 128, 4, 16, 8
+    x = jax.random.normal(ks[0], (b, s, nh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    y16 = ssm_scan(x, dt, a, bm, cm, chunk=16, head_block=4)
+    y64 = ssm_scan(x, dt, a, bm, cm, chunk=64, head_block=4)
+    assert jnp.allclose(y16, y64, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused ddpm step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 16, 16, 1), (2, 8, 8, 3), (8, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ddpm_step_vs_ref(shape, dtype, rng):
+    sched = cosine_schedule(50)
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    eps = jax.random.normal(ks[1], shape, dtype)
+    z = jax.random.normal(ks[2], shape, dtype)
+    t = jnp.arange(1, shape[0] + 1) * (50 // shape[0])
+    t = jnp.clip(t, 1, 50)
+    coefs = ddpm_step_coefs(sched, t)
+    out = ddpm_step(x, eps, z, coefs, block=64)
+    expected = ref.ddpm_step_ref(x, eps, z, coefs)
+    assert jnp.allclose(out.astype(jnp.float32),
+                        expected.astype(jnp.float32), atol=_tol(dtype))
+
+
+def test_ddpm_step_matches_p_sample(rng):
+    from repro.diffusion import ddpm as dmod
+    sched = cosine_schedule(20)
+    ks = jax.random.split(rng, 3)
+    shape = (4, 8, 8, 1)
+    x = jax.random.normal(ks[0], shape)
+    eps = jax.random.normal(ks[1], shape)
+    z = jax.random.normal(ks[2], shape)
+    t = jnp.array([1, 5, 10, 20])
+    out = ddpm_step(x, eps, z, ddpm_step_coefs(sched, t))
+    expected = dmod.p_sample(sched, x, t, eps, z)
+    assert jnp.allclose(out, expected, atol=2e-5)
+
+
+def test_ddpm_step_t1_is_deterministic(rng):
+    """At t == 1 no noise is added (the keep flag)."""
+    sched = cosine_schedule(10)
+    shape = (2, 8, 8, 1)
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], shape)
+    eps = jax.random.normal(ks[1], shape)
+    t = jnp.array([1, 1])
+    c = ddpm_step_coefs(sched, t)
+    o1 = ddpm_step(x, eps, jax.random.normal(ks[2], shape), c)
+    o2 = ddpm_step(x, eps, 100.0 + jax.random.normal(ks[2], shape), c)
+    assert jnp.allclose(o1, o2)

@@ -1,0 +1,137 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collafuse
+from repro.core.collafuse import CutPlan
+from repro.diffusion import ddpm
+from repro.diffusion.schedule import cosine_schedule, linear_schedule
+from repro.models.attention import blockwise_attention
+from repro.models.moe import _capacity, _dispatch_indices, router_topk
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# CutPlan: total work conservation + monotone privacy/energy structure
+# ---------------------------------------------------------------------------
+@given(T=st.integers(2, 1000), c=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_cutplan_partition_property(T, c):
+    plan = CutPlan(T, c)
+    assert plan.n_server_steps + plan.n_client_steps == T
+    assert 0 <= plan.t_split <= T
+
+
+@given(T=st.integers(10, 500),
+       c1=st.floats(0.0, 1.0), c2=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_cutplan_monotone_in_c(T, c1, c2):
+    lo, hi = sorted((c1, c2))
+    assert CutPlan(T, lo).n_client_steps <= CutPlan(T, hi).n_client_steps
+    f_lo = collafuse.flops_split(CutPlan(T, lo), 1e6, 4)["client_fraction"]
+    f_hi = collafuse.flops_split(CutPlan(T, hi), 1e6, 4)["client_fraction"]
+    assert f_lo <= f_hi + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Diffusion: q_sample interpolation bounds
+# ---------------------------------------------------------------------------
+@given(t=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_q_sample_is_convex_mix(t, seed):
+    """x_t = a·x0 + b·eps with a² + b² == 1 (variance preserving)."""
+    s = cosine_schedule(100)
+    a = float(s.sqrt_alpha_bar[t - 1])
+    b = float(s.sqrt_one_minus_alpha_bar[t - 1])
+    assert abs(a * a + b * b - 1.0) < 1e-5
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (8, 4))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+    xt = ddpm.q_sample(s, x0, jnp.full((8,), t, jnp.int32), eps)
+    assert jnp.allclose(xt, a * x0 + b * eps, atol=1e-5)
+
+
+@given(T=st.integers(2, 300))
+@settings(**SETTINGS)
+def test_schedules_well_formed(T):
+    for s in (cosine_schedule(T), linear_schedule(T)):
+        assert np.all(np.asarray(s.betas) > 0)
+        assert np.all(np.asarray(s.betas) < 1)
+        assert np.all(np.diff(np.asarray(s.alpha_bar)) <= 0)
+        assert np.all(np.asarray(s.posterior_var) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch: capacity accounting
+# ---------------------------------------------------------------------------
+@given(n=st.integers(1, 64), k=st.integers(1, 4), e=st.integers(2, 16),
+       seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_dispatch_positions_respect_capacity(n, k, e, seed):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    top_i = jnp.asarray(rng.integers(0, e, (n, k)), jnp.int32)
+    cap = _capacity(n, k, e, 1.0)
+    pos, keep = _dispatch_indices(top_i, e, cap)
+    pos, keep, top = np.asarray(pos), np.asarray(keep), np.asarray(top_i)
+    assert (pos[keep] < cap).all()
+    # no two kept assignments share an (expert, slot)
+    slots = set()
+    for i in range(n):
+        for j in range(k):
+            if keep[i, j]:
+                key = (int(top[i, j]), int(pos[i, j]))
+                assert key not in slots
+                slots.add(key)
+
+
+@given(n=st.integers(2, 32), e=st.integers(2, 8), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_router_probs_normalized(n, e, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, e))
+    k = min(2, e)
+    p, idx, aux = router_topk(x, w, k)
+    assert np.allclose(np.asarray(p).sum(-1), 1.0, atol=1e-5)
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < e).all()
+    # aux ~ 1 at perfect balance; small-n estimates fluctuate below
+    assert 0.3 <= float(aux) < 50.0
+
+
+# ---------------------------------------------------------------------------
+# Attention: blockwise == materialized softmax for random shapes
+# ---------------------------------------------------------------------------
+@given(s=st.sampled_from([32, 64, 128]), h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_blockwise_attention_property(s, h, g, seed):
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(seed)
+    kv = h // g if h % g == 0 else h
+    q = jax.random.normal(key, (1, s, h, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, kv, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, kv, 16))
+    out = blockwise_attention(q, k, v, causal=True)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    assert jnp.allclose(out, expected, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: step contraction & clipping
+# ---------------------------------------------------------------------------
+@given(clip=st.floats(0.1, 5.0), scale=st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_grad_clip_bounds_update(clip, scale):
+    from repro.optim import adamw
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=clip)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init_state(params, cfg)
+    grads = {"w": jnp.full((4,), scale)}
+    _, _, m = adamw.apply_updates(params, grads, state, cfg)
+    clipped = min(float(jnp.sqrt(jnp.sum(jnp.square(grads["w"])))), clip)
+    assert float(m["grad_norm"]) == jnp.sqrt(jnp.sum(jnp.square(grads["w"])))
+    del clipped
