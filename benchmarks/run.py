@@ -153,6 +153,100 @@ def bench_energy_split(args):
 
 
 # ---------------------------------------------------------------------------
+# Multi-client round scaling — batched (vmap/pjit) engine vs looped baseline
+# ---------------------------------------------------------------------------
+def bench_clients_scaling(args):
+    """Tentpole bench: round wall-time vs n_clients for the batched engine
+    (ONE fused server round + ONE vmapped client round) against the looped
+    per-client reference.  The backbone is a deliberately tiny MLP
+    eps-model (matmuls only) so the measurement isolates ENGINE
+    orchestration — per-client dispatch, host pooling, metric syncs — the
+    regime the paper's resource-constrained clients live in.  (Conv
+    backbones gain less from single-device vmap because XLA CPU lowers
+    per-client-kernel convolutions to a serial loop; the mesh-sharded
+    path in launch/clients_sweep.py is the lever there.)  Writes
+    results/BENCH_clients_scaling.json so CI accumulates the perf
+    trajectory.  ``--toy`` shrinks the sweep for the CI smoke job (and
+    skips the speedup gate, which is calibrated for a full CPU run)."""
+    import numpy as np
+
+    from repro.core.trainer import CollaFuseTrainer, TrainerConfig
+
+    sizes = (2, 4) if args.toy else (2, 8, 32, 64)
+    rounds = 2 if args.toy else 5
+    batch = 4
+    size, hidden, tdim = 8, 64, 16
+    d = size * size
+
+    def init_fn(key):
+        ks = jax.random.split(key, 3)
+        s = lambda k, shape, fan: jax.random.normal(k, shape) / np.sqrt(fan)
+        return {"w1": s(ks[0], (d + tdim, hidden), d + tdim),
+                "w2": s(ks[1], (hidden, hidden), hidden),
+                "w3": s(ks[2], (hidden, d), hidden)}
+
+    def apply_fn(p, x, t):
+        b = x.shape[0]
+        freqs = jnp.exp(jnp.linspace(0.0, 3.0, tdim // 2))
+        ang = t[:, None].astype(jnp.float32) * freqs[None]
+        temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        h = jnp.concatenate([x.reshape(b, -1), temb], -1)
+        h = jax.nn.silu(h @ p["w1"])
+        h = jax.nn.silu(h @ p["w2"])
+        return (h @ p["w3"]).reshape(x.shape)
+
+    def timed(trainer, data):
+        for _ in range(2):                          # compile + warmup
+            m = trainer.train_round(data)
+        samples = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            m = trainer.train_round(data)
+            samples.append(time.perf_counter() - t0)
+        return sorted(samples)[len(samples) // 2], m    # median round
+
+    print(f"# clients_scaling: round wall-time vs n_clients "
+          f"({size}x{size} MLP eps-model, T=20, batch {batch}, "
+          f"{rounds} timed rounds)")
+    print("n_clients,batched_s,looped_s,speedup,server_gflops,client_gflops")
+    rows = []
+    import dataclasses
+    for n in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(0), n)
+        data = [jax.random.normal(k, (batch, size, size, 1)) for k in ks]
+        cfg = TrainerConfig(n_clients=n, T=20, cut_ratio=0.8)
+        b_s, m = timed(CollaFuseTrainer(cfg, init_fn, apply_fn), data)
+        l_s, _ = timed(CollaFuseTrainer(
+            dataclasses.replace(cfg, batched=False), init_fn, apply_fn),
+            data)
+        rows.append({"n_clients": n, "batched_s": b_s, "looped_s": l_s,
+                     "speedup": l_s / b_s,
+                     "server_flops": m["server_flops"],
+                     "client_flops": m["client_flops"]})
+        print(f"{n},{b_s:.4f},{l_s:.4f},{l_s/b_s:.2f},"
+              f"{m['server_flops']/1e9:.3f},{m['client_flops']/1e9:.3f}",
+              flush=True)
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_clients_scaling.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {out}")
+    if not args.toy:
+        # batched round time must grow SUBLINEARLY in n_clients ...
+        t0, tN = rows[0], rows[-1]
+        growth = (tN["batched_s"] / t0["batched_s"])
+        factor = tN["n_clients"] / t0["n_clients"]
+        assert growth < factor, \
+            f"batched round not sublinear: {growth:.1f}x time for " \
+            f"{factor:.0f}x clients"
+        # ... and beat the looped engine >=3x at n_clients=32 (issue gate)
+        at32 = next(r for r in rows if r["n_clients"] == 32)
+        assert at32["speedup"] >= 3.0, \
+            f"batched engine only {at32['speedup']:.2f}x at 32 clients"
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels vs oracle
 # ---------------------------------------------------------------------------
 def bench_kernels(args):
@@ -247,6 +341,7 @@ BENCHES = {
     "fig1_disclosure": bench_fig1_disclosure,
     "fig3_tradeoff": bench_fig3_tradeoff,
     "energy_split": bench_energy_split,
+    "clients_scaling": bench_clients_scaling,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }
@@ -257,6 +352,8 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(BENCHES), default=None)
     ap.add_argument("--rounds", type=int, default=40,
                     help="training rounds per cut-ratio in fig3_tradeoff")
+    ap.add_argument("--toy", action="store_true",
+                    help="CI-smoke scale: tiny sweeps, no perf gates")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     t0 = time.time()

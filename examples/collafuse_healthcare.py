@@ -23,7 +23,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import UNetConfig
 from repro.core import privacy

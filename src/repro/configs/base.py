@@ -207,7 +207,6 @@ class ModelConfig:
     def _mlstm_params(self) -> int:
         d = self.d_model
         di = 2 * d
-        hd = di // max(self.n_heads, 1)
         p = d * 2 * di                 # up proj (x, gate)
         p += di * 3 * di // 2          # q, k, v projections at d_inner? use di each
         p = d * 2 * di + 3 * di * di + 2 * di * self.n_heads  # qkv + i/f gates

@@ -23,7 +23,7 @@ independently trainable — this is the observation that makes the split work
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +113,23 @@ def make_server_batch(sched: DiffusionSchedule, plan: CutPlan, key, x0):
     eps = jax.random.normal(k_n, x0.shape, x0.dtype)
     x_t = ddpm.q_sample(sched, x0, t, eps)
     return {"x_t": x_t, "t": t, "eps": eps}
+
+
+def make_pooled_server_batch(sched: DiffusionSchedule, plan: CutPlan,
+                             keys, x0_stack):
+    """Protocol steps 2-3 for ALL clients in one traced program.
+
+    ``keys``: [n_clients, 2] stacked PRNG keys (one per client, same draw
+    order as the looped protocol); ``x0_stack``: [n_clients, b, ...] local
+    batches.  vmaps :func:`make_server_batch` over the client axis and
+    flattens to the pooled server batch [n_clients*b, ...] — ordered client-
+    major, i.e. exactly ``concatenate([make_server_batch(k_i, x0_i)])``, so
+    the fused server step reproduces the looped pooling bit-for-bit.
+    """
+    up = jax.vmap(lambda k, x0: make_server_batch(sched, plan, k, x0))(
+        keys, x0_stack)
+    n, b = x0_stack.shape[:2]
+    return jax.tree.map(lambda a: a.reshape((n * b,) + a.shape[2:]), up)
 
 
 # ---------------------------------------------------------------------------

@@ -10,9 +10,8 @@ non-trivial.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Tuple
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

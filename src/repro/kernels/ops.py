@@ -9,7 +9,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ddpm_step as _ddpm
 from repro.kernels import flash_attention as _fa

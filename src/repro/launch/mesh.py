@@ -4,6 +4,8 @@ A FUNCTION (not module-level) so importing never touches jax device state.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 # TPU v5e hardware constants used by the roofline (per chip)
@@ -12,17 +14,59 @@ HBM_BW = 819e9                    # B/s
 ICI_BW = 50e9                     # B/s per link
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the jax version has them
+    (jax.sharding.AxisType landed after 0.4.x; older versions default to
+    Auto semantics under jit anyway)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    kwargs = {"axis_types": (at.Auto,) * len(shape)} if at is not None else {}
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_demo_mesh(data: int = 2, model: int = 4):
     """Small mesh for sharding tests (requires forced host devices)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh`` where available (newer jax); on older versions the
+    Mesh object is itself the context manager that sets the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def force_host_devices(n: int) -> None:
+    """Present the host CPU as n XLA devices.  Must run before the jax
+    backend initializes (i.e. before the first jax.devices() call)."""
+    if n:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def host_mesh(mesh_shape: str = "", force_devices: int = 0):
+    """(data, model) mesh over whatever devices exist.
+
+    ``mesh_shape``: "DxM" (e.g. "2x4"); empty = all devices on the data
+    axis.  ``force_devices``: force N host devices first (CPU containers;
+    call before anything else touches jax devices).  The shared entry point
+    for launch/train.py and launch/clients_sweep.py.
+    """
+    force_host_devices(force_devices)
+    devs = jax.devices()
+    if mesh_shape:
+        d, m = (int(x) for x in mesh_shape.split("x"))
+    else:
+        d, m = len(devs), 1
+    assert d * m == len(devs), f"mesh {d}x{m} != {len(devs)} devices"
+    return make_mesh((d, m), ("data", "model"))
 
 
 def batch_axes_of(mesh) -> tuple:

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -119,7 +119,6 @@ def parse_collectives(hlo_text: str, n_devices: int) -> Dict:
 # ---------------------------------------------------------------------------
 def probe_units(cfg: ModelConfig):
     """(unit_layer_counts_for_probes, n_units_full, probe_cfg_fn)."""
-    import dataclasses as dc
     if cfg.family == "hybrid":
         k = cfg.attn_every
         return (k, 2 * k), cfg.n_layers / k

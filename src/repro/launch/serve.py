@@ -10,7 +10,6 @@ Each "request wave" is a batch of prompts; the service prefills the cache
 prefill) and then decodes ``--tokens`` new tokens per sequence.
 """
 import argparse
-import os
 
 
 def _parse_args(argv=None):
@@ -30,10 +29,8 @@ def _parse_args(argv=None):
 
 def main(argv=None):
     args = _parse_args(argv)
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count={args.devices}").strip()
+    from repro.launch.mesh import host_mesh, mesh_context
+    mesh = host_mesh(args.mesh_shape, force_devices=args.devices)
 
     import time
 
@@ -48,19 +45,13 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    devs = jax.devices()
-    if args.mesh_shape:
-        d, m = (int(x) for x in args.mesh_shape.split("x"))
-    else:
-        d, m = len(devs), 1
-    mesh = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    d, m = mesh.shape["data"], mesh.shape["model"]
     ctx = make_ctx(mesh)
     print(f"serving {args.arch} on data:{d}xmodel:{m} "
           f"(window={args.window or 'full'})")
 
     key = jax.random.PRNGKey(args.seed)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = tf.init_params(key, cfg)
         p_shard = shd.to_shardings(shd.param_specs(params, ctx), mesh)
         params = jax.device_put(params, p_shard)

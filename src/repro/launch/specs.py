@@ -7,7 +7,6 @@ precomputed with the right shapes.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional
 
 import jax

@@ -1,11 +1,9 @@
 """jit-able step functions (train / prefill / decode) with sharding plumbing."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch.mesh import batch_axes_of

@@ -13,8 +13,6 @@ checkpointing are the production code paths (launch/steps.py,
 parallel/sharding.py, optim/, checkpoint/).
 """
 import argparse
-import os
-import sys
 
 
 def _parse_args(argv=None):
@@ -41,15 +39,12 @@ def _parse_args(argv=None):
 
 def main(argv=None):
     args = _parse_args(argv)
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count={args.devices}").strip()
+    from repro.launch.mesh import host_mesh, mesh_context
+    mesh = host_mesh(args.mesh_shape, force_devices=args.devices)
 
     import time
 
     import jax
-    import jax.numpy as jnp
 
     from repro.checkpoint import io as ckpt_io
     from repro.configs import get_config
@@ -63,20 +58,13 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
 
-    devs = jax.devices()
-    if args.mesh_shape:
-        d, m = (int(x) for x in args.mesh_shape.split("x"))
-    else:
-        d, m = len(devs), 1
-    assert d * m == len(devs), f"mesh {d}x{m} != {len(devs)} devices"
-    mesh = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    d, m = mesh.shape["data"], mesh.shape["model"]
     ctx = make_ctx(mesh)
     print(f"arch={args.arch} reduced={args.reduced} mesh=data:{d}xmodel:{m} "
           f"fsdp={args.fsdp}")
 
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = tf.init_params(key, cfg)
         opt_cfg = adamw.AdamWConfig(lr=args.lr)
         opt = adamw.init_state(params, opt_cfg)

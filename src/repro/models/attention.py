@@ -199,7 +199,8 @@ def qshard_attention(q, k, v, ctx: ShardCtx, *, causal: bool = True,
         off = idx * (sq // n)
         return _blockwise_dyn(qs, ks, vs, off, causal=causal, window=window)
 
-    return jax.shard_map(
+    from repro.models.layers import shard_map_compat
+    return shard_map_compat(
         local, mesh=ctx.mesh,
         in_specs=(P(bs, axis), P(bs), P(bs)),
         out_specs=P(bs, axis))(q, k, v)

@@ -11,8 +11,6 @@ sharded over the model axis via activation constraints.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -154,7 +152,6 @@ def ssm_decode(x, p, cache, cfg: ModelConfig, ctx: ShardCtx):
                     preferred_element_type=jnp.float32)[:, 0]
     xbc = jnp.concatenate([xi, bm, cm], axis=-1)               # (B,C)
     conv_hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
-    w = p["conv_w"].shape[0]
     out = (conv_hist.astype(jnp.float32) *
            p["conv_w"].astype(jnp.float32)[None]).sum(axis=1) + \
         p["conv_b"].astype(jnp.float32)

@@ -8,8 +8,6 @@ architectures cover the production-mesh path).
 from __future__ import annotations
 
 import math
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -15,7 +15,6 @@ from typing import Optional
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 from repro.models.layers import ShardCtx
 
 M = "model"
@@ -180,6 +179,30 @@ def batch_specs(batch_abstract, ctx: ShardCtx):
         spec = [B] + [None] * (leaf.ndim - 1)
         return _fit_spec(leaf.shape, leaf.ndim, spec, ctx)
     return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+# ---------------------------------------------------------------------------
+# CollaFuse multi-client specs (core/trainer.py batched round)
+# ---------------------------------------------------------------------------
+def pooled_server_batch_specs(batch_abstract, ctx: ShardCtx):
+    """The pooled server upload {x_t, t, eps}: leading dim is the flattened
+    [n_clients*b] sample axis -> sharded over the data axes so the heavy
+    shared-backbone update is data-parallel across the mesh.  Non-divisible
+    pools demote to replicated — exactly the input-batch rule, so delegate."""
+    return batch_specs(batch_abstract, ctx)
+
+
+def client_stack_specs(stack_abstract, ctx: ShardCtx):
+    """Leading-axis client stacks (params/opt/batches, leaves [n_clients,...]):
+    shard the CLIENT axis over the data axes — each data-parallel group owns a
+    subset of clients, so the vmapped client update runs them side-by-side
+    with zero cross-client collectives (client models never all-reduce)."""
+    def rule(_path, leaf):
+        if leaf.ndim == 0:           # shared scalars (none today) replicate
+            return P()
+        spec = [B] + [None] * (leaf.ndim - 1)
+        return _fit_spec(leaf.shape, leaf.ndim, spec, ctx)
+    return jax.tree_util.tree_map_with_path(rule, stack_abstract)
 
 
 def to_shardings(spec_tree, mesh):

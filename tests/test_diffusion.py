@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from repro.diffusion import ddpm
-from repro.diffusion.schedule import cosine_schedule, get_schedule, \
-    linear_schedule
+from repro.diffusion.schedule import cosine_schedule, linear_schedule
 
 
 @pytest.mark.parametrize("mk", [cosine_schedule, linear_schedule])

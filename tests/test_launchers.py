@@ -41,6 +41,19 @@ def test_train_launcher_fsdp_moe():
 
 
 @pytest.mark.slow
+def test_clients_sweep_launcher_batched_engine(tmp_path):
+    """The batched multi-client round on a real 4-way data mesh, including
+    the looped-engine comparison and the JSON artefact."""
+    out_json = str(tmp_path / "sweep.json")
+    out = _run("repro.launch.clients_sweep", "--devices", "4",
+               "--mesh-shape", "4x1", "--clients", "2", "4", "--rounds", "2",
+               "--compare-looped", "--json", out_json)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "clients sweep OK: 2 points" in out.stdout
+    assert os.path.exists(out_json)
+
+
+@pytest.mark.slow
 def test_serve_launcher_decodes():
     out = _run("repro.launch.serve", "--arch", "glm4-9b", "--devices", "8",
                "--mesh-shape", "2x4", "--requests", "2", "--batch", "4",

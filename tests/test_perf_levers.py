@@ -15,7 +15,7 @@ SCRIPT = textwrap.dedent("""
     from repro.configs import get_config
     from repro.models import transformer as tf, attention as attn
     from repro.models.layers import ShardCtx
-    from repro.launch.mesh import make_demo_mesh
+    from repro.launch.mesh import make_demo_mesh, mesh_context
     from repro.parallel import sharding as shd
 
     mesh = make_demo_mesh(2, 4)
@@ -26,7 +26,7 @@ SCRIPT = textwrap.dedent("""
     q = jax.random.normal(ks[0], (b, s, h, hd))
     k = jax.random.normal(ks[1], (b, s, kv, hd))
     v = jax.random.normal(ks[2], (b, s, kv, hd))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for w in (0, 24):
             o_ref = attn.blockwise_attention(q, k, v, causal=True, window=w)
             o_qs = attn.qshard_attention(q, k, v, ctx_qs, causal=True,
@@ -40,7 +40,7 @@ SCRIPT = textwrap.dedent("""
                               cfg.vocab_size)
     ref, _ = tf.forward(params, {"tokens": toks}, cfg)
     ctx_cs = ShardCtx(mesh=mesh, batch_axes=("data",), cache_seq_shard=True)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         cache = tf.init_cache(cfg, 4, 16)
         cache = jax.device_put(
             cache, shd.to_shardings(shd.cache_specs(cache, ctx_cs), mesh))

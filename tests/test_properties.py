@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: pip install -e .[dev] to run property tests")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
