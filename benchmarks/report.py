@@ -1,4 +1,6 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/,
+plus the system-bench tables (clients_scaling, serve_continuous) from
+results/BENCH_*.json when present.
 
     PYTHONPATH=src python -m benchmarks.report            # markdown to stdout
 """
@@ -7,7 +9,8 @@ from __future__ import annotations
 import json
 import os
 
-DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
 
 ARCHS = ["qwen2-vl-2b", "granite-3-8b", "kimi-k2-1t-a32b",
          "deepseek-v2-236b", "glm4-9b", "minicpm-2b", "musicgen-large",
@@ -77,6 +80,40 @@ def roofline_table(recs):
               f"| {ro.get('useful_ratio', 0):.2f} | {hint} |")
 
 
+def _load_bench(name):
+    p = os.path.join(RESULTS, f"BENCH_{name}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def clients_scaling_table(rows):
+    print("| n_clients | batched s | looped s | speedup | server GFLOP "
+          "| client GFLOP |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['n_clients']} | {r['batched_s']:.4f} "
+              f"| {r['looped_s']:.4f} | {r['speedup']:.2f}x "
+              f"| {r['server_flops']/1e9:.3f} "
+              f"| {r['client_flops']/1e9:.3f} |")
+
+
+def serve_table(rec):
+    print(f"continuous-batching engine vs sequential per-request "
+          f"split_sample — {rec['n_requests']} requests on {rec['slots']} "
+          f"slots, T={rec['T']}, c∈{rec['cut_ratios']}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| requests/s | images/s | speedup vs sequential | p50 latency "
+          "(ticks) | p95 latency (ticks) | utilization | client FLOP share |")
+    print("|---|---|---|---|---|---|---|")
+    print(f"| {rec['requests_per_s']:.1f} | {rec['images_per_s']:.1f} "
+          f"| {rec['speedup']:.2f}x | {rec['latency_ticks_p50']:.0f} "
+          f"| {rec['latency_ticks_p95']:.0f} "
+          f"| {rec['utilization_mean']:.2f} "
+          f"| {rec['client_fraction']:.2f} |")
+
+
 def summary(recs):
     n = len(recs)
     dom = {}
@@ -106,6 +143,14 @@ def main():
     print("\n## §Roofline (single-pod)\n")
     roofline_table(recs)
     summary(recs)
+    scaling = _load_bench("clients_scaling")
+    if scaling:
+        print("\n## §Multi-client round scaling (batched vs looped)\n")
+        clients_scaling_table(scaling)
+    serve = _load_bench("serve")
+    if serve:
+        print("\n## §Serving (continuous batching)\n")
+        serve_table(serve)
 
 
 if __name__ == "__main__":

@@ -153,29 +153,14 @@ def bench_energy_split(args):
 
 
 # ---------------------------------------------------------------------------
-# Multi-client round scaling — batched (vmap/pjit) engine vs looped baseline
+# Shared backbone for the orchestration benches
 # ---------------------------------------------------------------------------
-def bench_clients_scaling(args):
-    """Tentpole bench: round wall-time vs n_clients for the batched engine
-    (ONE fused server round + ONE vmapped client round) against the looped
-    per-client reference.  The backbone is a deliberately tiny MLP
-    eps-model (matmuls only) so the measurement isolates ENGINE
-    orchestration — per-client dispatch, host pooling, metric syncs — the
-    regime the paper's resource-constrained clients live in.  (Conv
-    backbones gain less from single-device vmap because XLA CPU lowers
-    per-client-kernel convolutions to a serial loop; the mesh-sharded
-    path in launch/clients_sweep.py is the lever there.)  Writes
-    results/BENCH_clients_scaling.json so CI accumulates the perf
-    trajectory.  ``--toy`` shrinks the sweep for the CI smoke job (and
-    skips the speedup gate, which is calibrated for a full CPU run)."""
+def _tiny_mlp_eps_model(size: int = 8, hidden: int = 64, tdim: int = 16):
+    """Deliberately tiny matmul-only eps-model shared by clients_scaling
+    and serve_continuous, so both measure ENGINE orchestration (dispatch,
+    pooling, slot management) over the same backbone and stay comparable."""
     import numpy as np
 
-    from repro.core.trainer import CollaFuseTrainer, TrainerConfig
-
-    sizes = (2, 4) if args.toy else (2, 8, 32, 64)
-    rounds = 2 if args.toy else 5
-    batch = 4
-    size, hidden, tdim = 8, 64, 16
     d = size * size
 
     def init_fn(key):
@@ -194,6 +179,33 @@ def bench_clients_scaling(args):
         h = jax.nn.silu(h @ p["w1"])
         h = jax.nn.silu(h @ p["w2"])
         return (h @ p["w3"]).reshape(x.shape)
+
+    return init_fn, apply_fn
+
+
+# ---------------------------------------------------------------------------
+# Multi-client round scaling — batched (vmap/pjit) engine vs looped baseline
+# ---------------------------------------------------------------------------
+def bench_clients_scaling(args):
+    """Tentpole bench: round wall-time vs n_clients for the batched engine
+    (ONE fused server round + ONE vmapped client round) against the looped
+    per-client reference.  The backbone is a deliberately tiny MLP
+    eps-model (matmuls only) so the measurement isolates ENGINE
+    orchestration — per-client dispatch, host pooling, metric syncs — the
+    regime the paper's resource-constrained clients live in.  (Conv
+    backbones gain less from single-device vmap because XLA CPU lowers
+    per-client-kernel convolutions to a serial loop; the mesh-sharded
+    path in launch/clients_sweep.py is the lever there.)  Writes
+    results/BENCH_clients_scaling.json so CI accumulates the perf
+    trajectory.  ``--toy`` shrinks the sweep for the CI smoke job (and
+    skips the speedup gate, which is calibrated for a full CPU run)."""
+    from repro.core.trainer import CollaFuseTrainer, TrainerConfig
+
+    sizes = (2, 4) if args.toy else (2, 8, 32, 64)
+    rounds = 2 if args.toy else 5
+    batch = 4
+    size = 8
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
 
     def timed(trainer, data):
         for _ in range(2):                          # compile + warmup
@@ -244,6 +256,93 @@ def bench_clients_scaling(args):
         assert at32["speedup"] >= 3.0, \
             f"batched engine only {at32['speedup']:.2f}x at 32 clients"
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serving engine vs sequential per-request split_sample
+# ---------------------------------------------------------------------------
+def bench_serve_continuous(args):
+    """Tentpole serving bench: wall-time to serve a queue of generation
+    requests (mixed cut-ratios, batch sizes, client models) through the
+    continuous-batching engine (ONE masked denoise dispatch per tick,
+    retire-at-t_split, vmapped client finisher) against the sequential
+    per-request ``split_sample`` baseline.  The backbone is the same tiny
+    MLP eps-model as clients_scaling so the measurement isolates ENGINE
+    orchestration.  Gate (full run): ≥3x at 32 in-flight requests.  Writes
+    results/BENCH_serve.json (uploaded by the CI serve_smoke job)."""
+    import numpy as np
+
+    from repro.core import collafuse
+    from repro.core.collafuse import CutPlan
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.optim import adamw
+    from repro.serve import Request, ServeEngine, make_scheduler
+    from repro.serve.engine import sequential_fns, time_sequential
+
+    slots, n_requests, T = (8, 16, 10) if args.toy else (32, 64, 50)
+    n_clients = 4
+    size = 8
+    shape = (size, size, 1)
+    cut_ratios = (0.25, 0.5, 0.75)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    client_stack = adamw.tree_stack(
+        [init_fn(k) for k in jax.random.split(jax.random.PRNGKey(1),
+                                              n_clients)])
+    requests = [Request(req_id=i, key=jax.random.fold_in(
+                            jax.random.PRNGKey(7), i),
+                        batch=1, cut_ratio=cut_ratios[i % len(cut_ratios)],
+                        client_idx=i % n_clients)
+                for i in range(n_requests)]
+
+    eng = ServeEngine(sched, apply_fn, server_params, shape, slots=slots,
+                      scheduler=make_scheduler("fifo", T))
+
+    print(f"# serve_continuous: {n_requests} requests (batch 1, "
+          f"c∈{cut_ratios}) on {slots} slots, T={T}, MLP eps-model")
+    eng.serve(list(requests), client_stack)                # compile + warmup
+    res = eng.serve(list(requests), client_stack)          # warm jit cache
+
+    server_fn, client_fn_for = sequential_fns(apply_fn, server_params,
+                                              client_stack)
+    seq_s = time_sequential(sched, requests, server_fn, client_fn_for, shape)
+
+    # spot-check the engine against the per-lane sample_range reference
+    for r in (requests[0], requests[-1]):
+        comp = res.completions[r.req_id]
+        ref_x0, ref_mid = collafuse.split_sample_lane(
+            sched, CutPlan(T, r.cut_ratio), server_fn,
+            client_fn_for(r.client_idx), jax.random.fold_in(r.key, 0),
+            shape, return_intermediate=True)
+        np.testing.assert_allclose(comp.x_mid[0], np.asarray(ref_mid),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(comp.x0[0], np.asarray(ref_x0),
+                                   rtol=1e-5, atol=1e-5)
+
+    speedup = seq_s / res.wall_s
+    rec = {"scenario": "serve_continuous", "toy": bool(args.toy),
+           "slots": slots, "n_requests": n_requests, "T": T,
+           "cut_ratios": list(cut_ratios), "engine_s": res.wall_s,
+           "sequential_s": seq_s, "speedup": speedup, **res.summary}
+    print("engine_s,sequential_s,speedup,requests_per_s,"
+          "latency_ticks_p50,latency_ticks_p95,utilization_mean")
+    print(f"{res.wall_s:.3f},{seq_s:.3f},{speedup:.2f},"
+          f"{res.summary['requests_per_s']:.1f},"
+          f"{res.summary['latency_ticks_p50']:.0f},"
+          f"{res.summary['latency_ticks_p95']:.0f},"
+          f"{res.summary['utilization_mean']:.2f}", flush=True)
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out}")
+    if not args.toy:
+        # issue gate: continuous batching >=3x sequential at 32 in-flight
+        assert speedup >= 3.0, \
+            f"continuous batching only {speedup:.2f}x over sequential"
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +441,7 @@ BENCHES = {
     "fig3_tradeoff": bench_fig3_tradeoff,
     "energy_split": bench_energy_split,
     "clients_scaling": bench_clients_scaling,
+    "serve_continuous": bench_serve_continuous,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

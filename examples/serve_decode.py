@@ -1,10 +1,10 @@
 """Serve a small LM with batched requests: prefill + autoregressive decode.
 
 Uses a REDUCED variant of an assigned architecture (default yi-6b family)
-on CPU: initialises real params, prefills the KV cache by feeding the
-prompt through the jitted single-token ``decode_step`` (the same function
-the production dry-run lowers for decode_32k / long_500k), then samples
-new tokens.
+on CPU: initialises real params, prefills the KV cache with one jitted
+``lax.scan`` of the single-token ``decode_step`` over prompt positions
+(the same function the production dry-run lowers for decode_32k /
+long_500k, fused to 1 dispatch), then samples new tokens.
 
     PYTHONPATH=src python examples/serve_decode.py --arch yi-6b --tokens 16
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b  # hybrid
@@ -30,8 +30,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    key = jax.random.PRNGKey(args.seed)
-    k_p, k_tok, k_s = jax.random.split(key, 3)
+    key, k_p, k_tok = jax.random.split(jax.random.PRNGKey(args.seed), 3)
     params = tf.init_params(k_p, cfg)
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{args.arch} (reduced): {n/1e6:.1f}M params, family={cfg.family}")
@@ -45,22 +44,30 @@ def main():
         lambda p, c, toks, pos: tf.decode_step(p, c, {"tokens": toks},
                                                pos, cfg))
 
-    # ---- prefill: build the cache token-by-token through decode_step ------
+    # ---- prefill: ONE scan of decode_step over prompt positions -----------
+    @jax.jit
+    def prefill(p, c, toks):
+        def body(c, tok_pos):
+            tok, pos = tok_pos
+            logits, c = tf.decode_step(p, c, {"tokens": tok}, pos, cfg)
+            return c, logits[:, -1]
+        xs = (toks.T[:, :, None], jnp.arange(toks.shape[1], dtype=jnp.int32))
+        c, logits = jax.lax.scan(body, c, xs)
+        return logits[-1], c
+
     t0 = time.time()
-    logits = None
-    for i in range(s):
-        logits, cache = decode(params, cache, prompts[:, i:i + 1],
-                               jnp.int32(i))
-    jax.block_until_ready(logits)
+    last, cache = prefill(params, cache, prompts)
+    jax.block_until_ready(last)
     print(f"prefill {b}x{s}: {time.time()-t0:.2f}s")
 
     # ---- batched sampling loop ---------------------------------------------
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+    logits = last[:, None]
     generated = [tok]
     t0 = time.time()
     for i in range(args.tokens - 1):
         logits, cache = decode(params, cache, tok, jnp.int32(s + i))
-        k_s, k_draw = jax.random.split(k_s)
+        key, k_draw = jax.random.split(key)
         tok = jax.random.categorical(
             k_draw, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
         generated.append(tok)

@@ -166,6 +166,52 @@ def split_sample(sched: DiffusionSchedule, plan: CutPlan,
     return x0
 
 
+def lane_keys(req_key, batch: int):
+    """Per-image ("lane") key discipline for the serving engine.
+
+    Image i of a request derives ``fold_in(req_key, i)`` and splits it into
+    the same three roles as :func:`split_sample`: (k_init, k_srv, k_cli).
+    Per-image chains — rather than one batch-shaped chain — are what let a
+    request's images ride independent engine slots and still be replayed
+    exactly by :func:`split_sample_lane`.  Returns three [batch, 2] key
+    arrays.
+    """
+    ks = jax.vmap(
+        lambda i: jax.random.split(jax.random.fold_in(req_key, i), 3))(
+            jnp.arange(batch))
+    return ks[:, 0], ks[:, 1], ks[:, 2]
+
+
+def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
+                      server_fn: Callable, client_fn: Callable, lane_key,
+                      shape, return_intermediate: bool = False,
+                      use_kernel: bool = False):
+    """Single-image reference for one engine lane: the exact computation the
+    continuous-batching engine must reproduce for image i of a request when
+    handed ``lane_keys(req_key, batch)[·][i]``'s parent ``fold_in`` key.
+
+    Identical structure to :func:`split_sample` at batch 1, built on
+    :func:`ddpm.sample_range` — the serving tests compare engine slots
+    against this, lane by lane.
+    """
+    k_init, k_srv, k_cli = jax.random.split(lane_key, 3)
+    x_t = jax.random.normal(k_init, shape, jnp.float32)
+    if plan.n_server_steps > 0:
+        x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t[None],
+                                  plan.T, plan.t_split + 1,
+                                  use_kernel=use_kernel)[0]
+    else:
+        x_mid = x_t
+    if plan.n_client_steps > 0:
+        x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid[None],
+                               plan.t_split, 1, use_kernel=use_kernel)[0]
+    else:
+        x0 = x_mid
+    if return_intermediate:
+        return x0, x_mid
+    return x0
+
+
 def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
                        server_fn: Callable, key, x0_client):
     """What the server *could* reconstruct of a real client image: noise the

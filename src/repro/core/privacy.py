@@ -31,8 +31,7 @@ def feature_params(key=None, channels=(16, 32, 64), in_ch=1, feat_dim=256):
     return {"convs": params, "head": head}
 
 
-def extract_features(params, images):
-    """images: (N,H,W,C) in [-1,1] -> (N, feat_dim)."""
+def _extract_chunk(params, images):
     x = images.astype(jnp.float32)
     for w in params["convs"]:
         x = jax.lax.conv_general_dilated(
@@ -41,6 +40,25 @@ def extract_features(params, images):
         x = jax.nn.leaky_relu(x, 0.2)
     x = x.mean(axis=(1, 2))                       # global average pool
     return x @ params["head"]
+
+
+def extract_features(params, images, chunk_size: int = 512):
+    """images: (N,H,W,C) in [-1,1] -> (N, feat_dim).
+
+    Batches beyond ``chunk_size`` are processed in slices over the batch
+    axis so disclosure KID on serving-scale batches (≥1024 images) never
+    materialises one giant stack of conv activations.  Every sample's
+    features are a per-image function of the same frozen weights, so the
+    chunked path is exactly the one-shot path concatenated (asserted
+    bitwise in tests/test_collafuse.py); batches at or under ``chunk_size``
+    take the one-shot path unchanged.
+    """
+    n = images.shape[0]
+    if n <= chunk_size:
+        return _extract_chunk(params, images)
+    return jnp.concatenate(
+        [_extract_chunk(params, images[i:i + chunk_size])
+         for i in range(0, n, chunk_size)])
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,42 @@ def p_sample(sched: DiffusionSchedule, x_t, t, eps_hat, noise):
     return mean + jnp.where(is_last, 0.0, jnp.sqrt(var)) * noise
 
 
+def denoise_step(sched: DiffusionSchedule, x, t, eps_hat, noise,
+                 use_kernel: bool = False, clip: float = 3.0):
+    """One reverse step plus the reference sampler's post-step clip.
+
+    ``clip`` bounds the iterate (the ``clip_denoised`` stabilisation of
+    Ho et al.'s reference sampler — without it an undertrained εθ diverges
+    geometrically through the 1/sqrt(alpha) factor).  0 disables.  Shared
+    by :func:`sample_range` and the serving engine's masked tick so the two
+    paths stay numerically identical step-for-step.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        x = kops.ddpm_step(sched, x, t, eps_hat, noise)
+    else:
+        x = p_sample(sched, x, t, eps_hat, noise)
+    if clip:
+        x = jnp.clip(x, -clip, clip)
+    return x
+
+
+def p_sample_masked(sched: DiffusionSchedule, x, t, eps_hat, noise, active,
+                    use_kernel: bool = False, clip: float = 3.0):
+    """Masked reverse step over a slot array: lanes where ``active`` advance
+    x_t -> x_{t-1} (with the same clip as :func:`sample_range`); inactive
+    lanes pass through bit-unchanged.  ``t`` is clamped into {1..T} so
+    retired/empty lanes gather in-range schedule entries.  This is the
+    per-slot step of ``repro.serve.engine`` — one program over the whole
+    slot array with heterogeneous per-lane timesteps.
+    """
+    t_safe = jnp.clip(t, 1, sched.T)
+    x_new = denoise_step(sched, x, t_safe, eps_hat, noise,
+                         use_kernel=use_kernel, clip=clip)
+    m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
+    return jnp.where(m, x_new, x)
+
+
 def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
                  t_from: int, t_to: int, use_kernel: bool = False,
                  clip: float = 3.0):
@@ -74,10 +110,9 @@ def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
     Server partial denoise (CollaFuse step 4-5): t_from=T, t_to=t_c+1.
     Client completion (step 6): t_from=t_c, t_to=1.
 
-    ``clip`` bounds the iterate after every step (the ``clip_denoised``
-    stabilisation of Ho et al.'s reference sampler — without it an
-    undertrained εθ diverges geometrically through the 1/sqrt(alpha)
-    factor).  0 disables.
+    Key discipline (relied on by the serving engine's equivalence tests):
+    each step splits the carried key, ``k, k_n = split(k)``, and draws the
+    step noise from ``k_n``.
     """
     if t_from < t_to:
         return x_start
@@ -90,13 +125,8 @@ def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
         tb = jnp.full((b,), t, jnp.int32)
         eps_hat = model_fn(x, tb)
         noise = jax.random.normal(k_n, x.shape, x.dtype)
-        if use_kernel:
-            from repro.kernels import ops as kops
-            x = kops.ddpm_step(sched, x, tb, eps_hat, noise)
-        else:
-            x = p_sample(sched, x, tb, eps_hat, noise)
-        if clip:
-            x = jnp.clip(x, -clip, clip)
+        x = denoise_step(sched, x, tb, eps_hat, noise,
+                         use_kernel=use_kernel, clip=clip)
         return (x, k)
 
     x, _ = jax.lax.fori_loop(0, t_from - t_to + 1, body, (x_start, key))

@@ -6,8 +6,9 @@ Same pjit path as the decode dry-run shapes, at configurable scale::
         --devices 8 --mesh-shape 2x4 --requests 3 --batch 4 --tokens 8
 
 Each "request wave" is a batch of prompts; the service prefills the cache
-(token-by-token through the jitted decode step — identical math to a fused
-prefill) and then decodes ``--tokens`` new tokens per sequence.
+with ONE jitted ``lax.scan`` over prompt positions (identical math to the
+token-by-token loop, s dispatches fused into 1) and then decodes
+``--tokens`` new tokens per sequence.
 """
 import argparse
 
@@ -59,21 +60,34 @@ def main(argv=None):
             lambda p, c, toks, pos: tf.decode_step(
                 p, c, {"tokens": toks}, pos, cfg, ctx, window=args.window))
 
+        def prefill_fn(p, c, prompts):
+            # scan the jitted decode step over prompt positions: the same
+            # cache math as the per-token loop, one dispatch instead of s
+            def body(c, tok_pos):
+                tok, pos = tok_pos
+                logits, c = tf.decode_step(p, c, {"tokens": tok}, pos, cfg,
+                                           ctx, window=args.window)
+                return c, logits[:, -1]
+            toks = prompts.T[:, :, None]                  # (s, b, 1)
+            pos = jnp.arange(prompts.shape[1], dtype=jnp.int32)
+            c, logits = jax.lax.scan(body, c, (toks, pos))
+            return logits[-1], c
+        prefill = jax.jit(prefill_fn)
+
         b, s = args.batch, args.prompt_len
         max_len = s + args.tokens
         for req in range(args.requests):
-            key, k_tok, k_s = jax.random.split(key, 3)
+            key, k_tok = jax.random.split(key)
             prompts = jax.random.randint(k_tok, (b, s), 0, cfg.vocab_size)
             cache = tf.init_cache(cfg, b, max_len, window=args.window)
             c_shard = shd.to_shardings(shd.cache_specs(cache, ctx), mesh)
             cache = jax.device_put(cache, c_shard)
             t0 = time.time()
-            logits = None
-            for i in range(s):
-                logits, cache = decode(params, cache, prompts[:, i:i + 1],
-                                       jnp.int32(i))
+            last, cache = prefill(params, cache, prompts)
+            jax.block_until_ready(last)
             t_prefill = time.time() - t0
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            logits = last[:, None]
             out = [tok]
             t0 = time.time()
             for i in range(args.tokens - 1):

@@ -76,6 +76,10 @@ _PARAM_RULES = {
     "w_o": (2, (None, None)),
     # norms
     "scale": (1, (None,)),
+    # U-Net convs (serve_diffusion mesh path): shard the output-channel dim
+    # of rank-4 HWIO kernels on the model axis; the rank check in _fit_spec
+    # leaves the U-Net's rank-2 dense "w" leaves (time_proj/head) replicated
+    "w": (4, (None, None, None, M)),
 }
 
 _CACHE_RULES = {
@@ -203,6 +207,15 @@ def client_stack_specs(stack_abstract, ctx: ShardCtx):
         spec = [B] + [None] * (leaf.ndim - 1)
         return _fit_spec(leaf.shape, leaf.ndim, spec, ctx)
     return jax.tree_util.tree_map_with_path(rule, stack_abstract)
+
+
+def slot_specs(state_abstract, ctx: ShardCtx):
+    """Serving-engine slot state ({x, t, t_split, key, active}, leaves
+    [slots, ...]): shard the SLOT axis over the data axes so each
+    data-parallel group steps its own lanes — the masked tick then runs as
+    one pjit program with zero cross-lane collectives (lanes are
+    independent chains).  Same leading-axis rule as client stacks."""
+    return client_stack_specs(state_abstract, ctx)
 
 
 def to_shardings(spec_tree, mesh):

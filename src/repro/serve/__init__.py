@@ -1,0 +1,19 @@
+"""Continuous-batching split-inference serving for CollaFuse.
+
+``engine``    — slot-array engine: one jitted masked denoise step per tick
+                across all in-flight requests, retire-at-t_split, vmapped
+                client-segment finisher.
+``scheduler`` — admission policies (FIFO, cut-ratio-aware SJF with aging).
+``metrics``   — per-request latency, tick utilization, FLOP-split summary.
+"""
+from repro.serve.engine import (Completion, ServeEngine, ServeResult,
+                                serve_sequential)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (CutRatioScheduler, FIFOScheduler, Request,
+                                   make_scheduler)
+
+__all__ = [
+    "Completion", "CutRatioScheduler", "FIFOScheduler", "Request",
+    "ServeEngine", "ServeMetrics", "ServeResult", "make_scheduler",
+    "serve_sequential",
+]

@@ -1,0 +1,396 @@
+"""Continuous-batching split-inference engine for the CollaFuse server.
+
+The paper's deployment story (§3, Fig. 1-2) is shared server-side
+inference: each client draws x_T, the server runs the expensive first
+(1-c)·T denoising steps, and x_{t_split} crosses back for cheap local
+finishing.  Serving that to many concurrent clients one ``split_sample``
+call per request costs O(requests) dispatch chains.  This engine is the
+diffusion analogue of LLM continuous batching:
+
+* Generation requests (heterogeneous cut-ratios, batch sizes, arrival
+  ticks) queue in a scheduler and are admitted into a fixed-capacity array
+  of SLOTS, one image ("lane") per slot.
+* Every engine tick runs ONE jitted masked denoise step across the whole
+  slot array — per-slot timestep counters step t_i -> t_i-1; retired/empty
+  slots are masked out (``ddpm.p_sample_masked``) — so server throughput is
+  O(1) dispatches per tick regardless of how many requests are in flight.
+* When a slot reaches its request's t_split the engine retires it and
+  emits x_{t_split} (the DISCLOSED tensor of the protocol); freed slots are
+  refilled from the queue mid-flight, between ticks.
+* A vmapped client-segment finisher completes t_split..1 for every emitted
+  image under its client's private model, again with masked per-lane
+  counters so heterogeneous t_split share one program.
+
+Key discipline: lane i of a request uses ``fold_in(req.key, i)`` split
+into (k_init, k_srv, k_cli) — see :func:`repro.core.collafuse.lane_keys` —
+and within a segment follows ``sample_range``'s ``k, k_n = split(k)`` chain
+exactly, so every lane is replayed bit-for-bit in key space by
+:func:`repro.core.collafuse.split_sample_lane` (numerical agreement is
+asserted in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collafuse
+from repro.core.collafuse import CutPlan
+from repro.diffusion import ddpm
+from repro.diffusion.schedule import DiffusionSchedule
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import FIFOScheduler, Request
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished request: the disclosed tensor and (after the client
+    finisher) the final images."""
+
+    request: Request
+    x_mid: np.ndarray                  # [batch, H, W, C] at t_split
+    admit_tick: int
+    retire_tick: int
+    k_cli: np.ndarray = None           # [batch, 2] client-segment keys
+    x0: Optional[np.ndarray] = None    # filled by finish_clients
+
+
+@dataclasses.dataclass
+class ServeResult:
+    completions: Dict[int, Completion]
+    summary: Dict
+    wall_s: float
+
+
+class ServeEngine:
+    """Fixed-capacity slot array + jitted masked tick + admission/retire.
+
+    ``apply_fn(params, x, t) -> eps_hat`` is the backbone convention shared
+    with :class:`repro.core.trainer.CollaFuseTrainer`; ``server_params`` is
+    the shared server model, ``client_stack`` (optional, for
+    :meth:`serve`) the [n_clients, ...] stacked private models.  Pass
+    ``mesh`` to pin the slot array onto the ``data`` axis — the tick then
+    runs as the pjit program ``launch/serve_diffusion.py`` lowers.
+    """
+
+    def __init__(self, sched: DiffusionSchedule, apply_fn: Callable,
+                 server_params, image_shape, *, slots: int = 32,
+                 scheduler=None, clip: float = 3.0,
+                 use_kernel: bool = False, mesh=None,
+                 flops_per_call: Optional[float] = None):
+        self.sched = sched
+        self.apply_fn = apply_fn
+        self.server_params = server_params
+        self.image_shape = tuple(image_shape)
+        self.slots = slots
+        self.scheduler = scheduler if scheduler is not None \
+            else FIFOScheduler()
+        self.clip = clip
+        self.use_kernel = use_kernel
+        self.mesh = mesh
+        n_params = sum(x.size for x in jax.tree.leaves(server_params))
+        # forward-only proxy (inference): ~2 FLOP per param per call
+        self.flops_per_call = (flops_per_call if flops_per_call is not None
+                               else 2.0 * n_params)
+        self._slot_shardings = None
+        if mesh is not None:
+            from repro.models.layers import ShardCtx
+            from repro.parallel import sharding as shd
+            ctx = ShardCtx(mesh=mesh,
+                           batch_axes=tuple(a for a in mesh.axis_names
+                                            if a in ("pod", "data")))
+            self._slot_shardings = shd.to_shardings(
+                shd.slot_specs(jax.eval_shape(self._init_state), ctx), mesh)
+        self._tick = jax.jit(self._make_tick(), donate_argnums=(0,))
+        self._finish = jax.jit(self._make_finish())
+
+    # ------------------------------------------------------------------
+    # device state
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        s = self.slots
+        state = {
+            "x": jnp.zeros((s,) + self.image_shape, jnp.float32),
+            "t": jnp.zeros((s,), jnp.int32),
+            "t_split": jnp.zeros((s,), jnp.int32),
+            "key": jnp.zeros((s, 2), jnp.uint32),
+            "active": jnp.zeros((s,), bool),
+        }
+        if self._slot_shardings is not None:
+            state = jax.device_put(state, self._slot_shardings)
+        return state
+
+    def _make_tick(self):
+        sched, shape = self.sched, self.image_shape
+
+        def tick(state, params):
+            # masked denoise: every live lane steps t_i -> t_i - 1 in ONE
+            # program; retired/empty lanes ride along untouched
+            stepping = state["active"] & (state["t"] > state["t_split"])
+            t_safe = jnp.clip(state["t"], 1, sched.T)
+            eps_hat = self.apply_fn(params, state["x"], t_safe)
+            ks = jax.vmap(jax.random.split)(state["key"])
+            k_next, k_n = ks[:, 0], ks[:, 1]
+            noise = jax.vmap(
+                lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
+            x = ddpm.p_sample_masked(sched, state["x"], state["t"], eps_hat,
+                                     noise, stepping,
+                                     use_kernel=self.use_kernel,
+                                     clip=self.clip)
+            t = jnp.where(stepping, state["t"] - 1, state["t"])
+            key = jnp.where(stepping[:, None], k_next, state["key"])
+            done = stepping & (t <= state["t_split"])   # now holds x_{t_split}
+            new = {"x": x, "t": t, "t_split": state["t_split"], "key": key,
+                   "active": state["active"] & ~done}
+            if self._slot_shardings is not None:
+                new = jax.lax.with_sharding_constraint(new,
+                                                       self._slot_shardings)
+            return new, done
+        return tick
+
+    def _make_finish(self):
+        sched, shape = self.sched, self.image_shape
+
+        def model_lane(stack, ci, xi, ti):
+            p = jax.tree.map(lambda a: a[ci], stack)
+            return self.apply_fn(p, xi[None], ti[None])[0]
+
+        def finish(client_stack, x, t_start, client_idx, keys):
+            def body(_, carry):
+                xc, t, key = carry
+                active = t >= 1
+                t_safe = jnp.clip(t, 1, sched.T)
+                eps = jax.vmap(lambda ci, xi, ti: model_lane(
+                    client_stack, ci, xi, ti))(client_idx, xc, t_safe)
+                ks = jax.vmap(jax.random.split)(key)
+                k_next, k_n = ks[:, 0], ks[:, 1]
+                noise = jax.vmap(
+                    lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
+                xc = ddpm.p_sample_masked(sched, xc, t, eps, noise, active,
+                                          use_kernel=self.use_kernel,
+                                          clip=self.clip)
+                t = jnp.where(active, t - 1, t)
+                key = jnp.where(active[:, None], k_next, key)
+                return (xc, t, key)
+            # traced bound -> one while-program shared by every t_split mix
+            x, _, _ = jax.lax.fori_loop(0, jnp.max(t_start), body,
+                                        (x, t_start, keys))
+            return x
+        return finish
+
+    # ------------------------------------------------------------------
+    # host-side admission / retirement
+    # ------------------------------------------------------------------
+    def _admit(self, state, req: Request, lanes: List[int], now: int,
+               inflight: Dict, lane_req: np.ndarray, lane_img: np.ndarray,
+               metrics: ServeMetrics):
+        plan = CutPlan(self.sched.T, req.cut_ratio)
+        k_init, k_srv, k_cli = collafuse.lane_keys(req.key, req.batch)
+        x_T = jax.vmap(
+            lambda k: jax.random.normal(k, self.image_shape, jnp.float32))(
+                k_init)
+        idx = jnp.asarray(lanes)
+        state = {
+            "x": state["x"].at[idx].set(x_T),
+            "t": state["t"].at[idx].set(self.sched.T),
+            "t_split": state["t_split"].at[idx].set(plan.t_split),
+            "key": state["key"].at[idx].set(k_srv),
+            "active": state["active"].at[idx].set(True),
+        }
+        lane_req[lanes] = req.req_id
+        lane_img[lanes] = np.arange(req.batch)
+        inflight[req.req_id] = {
+            "request": req, "remaining": req.batch, "admit_tick": now,
+            "k_cli": np.asarray(k_cli),
+            "x_mid": np.zeros((req.batch,) + self.image_shape, np.float32),
+        }
+        metrics.on_admit(req.req_id, now)
+        return state
+
+    def run(self, requests: List[Request],
+            max_ticks: Optional[int] = None) -> ServeResult:
+        """Serve the SERVER segment of every request: admit from the queue,
+        tick until drained, retire x_{t_split} per request.  Completions
+        carry ``x_mid`` only; :meth:`serve` adds the client finish."""
+        T = self.sched.T
+        for r in requests:
+            assert r.batch <= self.slots, \
+                f"request {r.req_id} batch {r.batch} > capacity {self.slots}"
+        # c=1 requests need zero server steps: they complete at arrival
+        # (x_mid = x_T) without ever occupying a slot
+        local_only = sorted(
+            (r for r in requests if CutPlan(T, r.cut_ratio).t_split >= T),
+            key=lambda r: r.arrival_tick)
+        for r in requests:
+            if CutPlan(T, r.cut_ratio).t_split < T:
+                self.scheduler.add(r)
+        if max_ticks is None:
+            span = max((r.arrival_tick for r in requests), default=0)
+            total = sum(CutPlan(T, r.cut_ratio).n_server_steps
+                        for r in requests)
+            max_ticks = span + total + T + 16      # generous liveness bound
+
+        state = self._init_state()
+        lane_req = np.full(self.slots, -1, np.int64)
+        lane_img = np.full(self.slots, -1, np.int64)
+        inflight: Dict[int, Dict] = {}
+        completions: Dict[int, Completion] = {}
+        metrics = ServeMetrics(self.slots)
+        metrics.start()
+        t0 = time.perf_counter()
+        now = 0
+
+        def drain_local(now):
+            while local_only and local_only[0].arrival_tick <= now:
+                r = local_only.pop(0)
+                k_init, _, k_cli = collafuse.lane_keys(r.key, r.batch)
+                x_T = jax.vmap(lambda k: jax.random.normal(
+                    k, self.image_shape, jnp.float32))(k_init)
+                metrics.on_admit(r.req_id, now)
+                metrics.on_retire(r.req_id, now)
+                completions[r.req_id] = Completion(
+                    request=r, x_mid=np.asarray(x_T), admit_tick=now,
+                    retire_tick=now, k_cli=np.asarray(k_cli))
+
+        while True:
+            drain_local(now)
+            # ---- admission: refill freed slots from the queue -----------
+            free = np.nonzero(lane_req < 0)[0].tolist()
+            for req in self.scheduler.select(len(free), now):
+                lanes, free = free[:req.batch], free[req.batch:]
+                state = self._admit(state, req, lanes, now, inflight,
+                                    lane_req, lane_img, metrics)
+            n_active = int((lane_req >= 0).sum())
+            if n_active == 0:
+                if len(self.scheduler) == 0 and not local_only:
+                    break
+                # idle: jump to the next arrival instead of spinning
+                nxt = [self.scheduler.next_arrival()]
+                if local_only:
+                    nxt.append(local_only[0].arrival_tick)
+                now = max(now + 1, min(t for t in nxt if t is not None))
+                continue
+            # ---- ONE dispatch steps every in-flight lane ----------------
+            state, done = self._tick(state, self.server_params)
+            metrics.on_tick(n_active)
+            now += 1
+            # ---- retire lanes that reached their t_split ----------------
+            done_np = np.asarray(done)
+            done_lanes = np.nonzero(done_np)[0]
+            if done_lanes.size:
+                x_done = np.asarray(
+                    jnp.take(state["x"], jnp.asarray(done_lanes), axis=0))
+                for j, lane in enumerate(done_lanes.tolist()):
+                    rec = inflight[int(lane_req[lane])]
+                    rec["x_mid"][lane_img[lane]] = x_done[j]
+                    rec["remaining"] -= 1
+                    if rec["remaining"] == 0:
+                        r = rec["request"]
+                        metrics.on_retire(r.req_id, now)
+                        completions[r.req_id] = Completion(
+                            request=r, x_mid=rec["x_mid"],
+                            admit_tick=rec["admit_tick"], retire_tick=now,
+                            k_cli=rec["k_cli"])
+                    lane_req[lane] = lane_img[lane] = -1
+            if now > max_ticks:
+                raise RuntimeError(
+                    f"engine exceeded liveness bound ({max_ticks} ticks) "
+                    f"with {len(self.scheduler)} queued / "
+                    f"{int((lane_req >= 0).sum())} in-flight — scheduler "
+                    "starvation?")
+
+        wall = time.perf_counter() - t0
+        summary = metrics.summary(wall, T, self.flops_per_call, requests)
+        return ServeResult(completions=completions, summary=summary,
+                           wall_s=wall)
+
+    # ------------------------------------------------------------------
+    def finish_clients(self, result: ServeResult, client_stack) -> None:
+        """Complete t_split..1 for every emitted image under its client's
+        private model — one vmapped masked program over all lanes of all
+        completed requests.  Fills ``Completion.x0`` in place."""
+        order = sorted(result.completions)
+        if not order:
+            return
+        xs, ts, cis, keys, spans = [], [], [], [], []
+        for rid in order:
+            comp = result.completions[rid]
+            r = comp.request
+            t_split = CutPlan(self.sched.T, r.cut_ratio).t_split
+            spans.append((rid, len(xs), r.batch))
+            xs.extend(np.asarray(comp.x_mid))
+            ts.extend([t_split] * r.batch)
+            cis.extend([r.client_idx] * r.batch)
+            keys.extend(comp.k_cli)
+        x0 = self._finish(client_stack,
+                          jnp.asarray(np.stack(xs)),
+                          jnp.asarray(ts, jnp.int32),
+                          jnp.asarray(cis, jnp.int32),
+                          jnp.asarray(np.stack(keys)))
+        x0 = np.asarray(x0)
+        for rid, start, batch in spans:
+            result.completions[rid].x0 = x0[start:start + batch]
+
+    def serve(self, requests: List[Request], client_stack=None,
+              max_ticks: Optional[int] = None) -> ServeResult:
+        """run() + client finish (when a client stack is supplied)."""
+        result = self.run(requests, max_ticks=max_ticks)
+        if client_stack is not None:
+            t0 = time.perf_counter()
+            self.finish_clients(result, client_stack)
+            finish_s = time.perf_counter() - t0
+            result.wall_s += finish_s
+            s = result.summary
+            s["finish_s"] = finish_s
+            s["requests_per_s"] = s["requests"] / max(result.wall_s, 1e-9)
+            s["images_per_s"] = s["images"] / max(result.wall_s, 1e-9)
+        return result
+
+
+# ---------------------------------------------------------------------------
+# sequential reference service (the benchmark baseline)
+# ---------------------------------------------------------------------------
+def serve_sequential(sched: DiffusionSchedule, requests: List[Request],
+                     server_fn: Callable, client_fn_for: Callable,
+                     image_shape) -> Dict[int, Any]:
+    """One ``split_sample`` call per request, in arrival order — the
+    pre-engine serving path (O(requests) dispatch chains).  Used as the
+    throughput baseline for the ≥3x continuous-batching gate."""
+    outs = {}
+    for r in sorted(requests, key=lambda r: (r.arrival_tick, r.req_id)):
+        plan = CutPlan(sched.T, r.cut_ratio)
+        x0, x_mid = collafuse.split_sample(
+            sched, plan, server_fn, client_fn_for(r.client_idx), r.key,
+            (r.batch,) + tuple(image_shape), return_intermediate=True)
+        outs[r.req_id] = (x0, x_mid)
+    jax.block_until_ready([v[0] for v in outs.values()])
+    return outs
+
+
+def sequential_fns(apply_fn, server_params, client_stack):
+    """(server_fn, client_fn_for) partials over a stacked client tree —
+    the model plumbing both callers of :func:`serve_sequential` need."""
+    import functools
+
+    from repro.optim import adamw
+    server_fn = functools.partial(apply_fn, server_params)
+    client_fn_for = lambda ci: functools.partial(
+        apply_fn, adamw.tree_unstack(client_stack, ci))
+    return server_fn, client_fn_for
+
+
+def time_sequential(sched: DiffusionSchedule, requests: List[Request],
+                    server_fn: Callable, client_fn_for: Callable,
+                    image_shape) -> float:
+    """Warmup pass + timed wall-clock of the sequential baseline.  Shared
+    by ``launch/serve_diffusion.py --compare-sequential`` and the gated
+    ``benchmarks.run --only serve_continuous`` so the baseline protocol
+    cannot drift between the launcher and the benchmark."""
+    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape)
+    t0 = time.perf_counter()
+    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape)
+    return time.perf_counter() - t0

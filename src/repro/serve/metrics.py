@@ -1,0 +1,96 @@
+"""Serving telemetry: per-request latency, tick utilization, FLOP split.
+
+The engine reports one event per admission/retirement plus one utilization
+sample per tick; :meth:`ServeMetrics.summary` folds them into the record
+written to ``results/BENCH_serve.json`` (requests/s, p50/p95 latency,
+mean slot utilization, and the server/client FLOP accounting via
+:func:`repro.core.collafuse.flops_split` — the paper's H2c energy proxy
+applied to inference traffic).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.collafuse import CutPlan, flops_split
+
+
+class ServeMetrics:
+    """Event sink for one engine run."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._admit: Dict[int, Dict] = {}       # req_id -> {tick, wall}
+        self._retire: Dict[int, Dict] = {}
+        self._util: List[float] = []            # active lanes / capacity
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def _now(self) -> float:
+        return time.perf_counter() - (self._t0 or 0.0)
+
+    def on_admit(self, req_id: int, tick: int) -> None:
+        self._admit[req_id] = {"tick": tick, "wall": self._now()}
+
+    def on_retire(self, req_id: int, tick: int) -> None:
+        self._retire[req_id] = {"tick": tick, "wall": self._now()}
+
+    def on_tick(self, active_lanes: int) -> None:
+        self._util.append(active_lanes / max(self.capacity, 1))
+
+    # ------------------------------------------------------------------
+    @property
+    def ticks(self) -> int:
+        return len(self._util)
+
+    def latency_ticks(self, req_id: int) -> Optional[int]:
+        """Server-segment residency: admission tick -> retirement tick."""
+        if req_id not in self._retire:
+            return None
+        return self._retire[req_id]["tick"] - self._admit[req_id]["tick"]
+
+    def summary(self, wall_s: float, T: int, flops_per_call: float,
+                requests) -> Dict:
+        """Aggregate one run over ``requests`` (the completed Request
+        objects) into the BENCH_serve.json record."""
+        lat_t = np.array([self.latency_ticks(r.req_id) for r in requests
+                          if self.latency_ticks(r.req_id) is not None],
+                         dtype=np.float64)
+        lat_w = np.array([self._retire[r.req_id]["wall"] -
+                          self._admit[r.req_id]["wall"]
+                          for r in requests if r.req_id in self._retire],
+                         dtype=np.float64)
+        server_f = client_f = 0.0
+        images = 0
+        for r in requests:
+            split = flops_split(CutPlan(T, r.cut_ratio), flops_per_call,
+                                r.batch)
+            server_f += split["server_flops"]
+            client_f += split["client_flops"]
+            images += r.batch
+        total = max(server_f + client_f, 1.0)
+        pct = (lambda q: float(np.percentile(lat_t, q))) if lat_t.size \
+            else (lambda q: 0.0)
+        pctw = (lambda q: float(np.percentile(lat_w, q))) if lat_w.size \
+            else (lambda q: 0.0)
+        return {
+            "requests": len(requests),
+            "images": images,
+            "ticks": self.ticks,
+            "requests_per_s": len(requests) / max(wall_s, 1e-9),
+            "images_per_s": images / max(wall_s, 1e-9),
+            "latency_ticks_p50": pct(50),
+            "latency_ticks_p95": pct(95),
+            "latency_s_p50": pctw(50),
+            "latency_s_p95": pctw(95),
+            "utilization_mean": float(np.mean(self._util))
+            if self._util else 0.0,
+            "server_flops": server_f,
+            "client_flops": client_f,
+            "client_fraction": client_f / total,
+        }

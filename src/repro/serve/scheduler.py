@@ -1,0 +1,117 @@
+"""Admission policies for the continuous-batching serving engine.
+
+A :class:`Request` asks for ``batch`` generated images at cut-ratio
+``cut_ratio``, finished by client ``client_idx``'s private model.  The
+engine asks its scheduler, once per tick, which arrived requests to admit
+into the currently free slots.  Two policies:
+
+* :class:`FIFOScheduler` — strict arrival order with head-of-line blocking
+  (a request that does not fit in the free slots blocks everything behind
+  it).  Trivially starvation-free: position in the queue only decreases.
+* :class:`CutRatioScheduler` — shortest-server-job-first: requests with the
+  fewest remaining *server* steps ((1-c)·T — high cut-ratio = cheap for the
+  server) are admitted first, which maximises slot turnover under mixed
+  cut-ratios.  Pure SJF starves low-c requests behind a stream of high-c
+  ones, so the score is aged: ``score = n_server_steps - aging · wait``.
+  After at most ``T / aging`` ticks of waiting a request outranks any fresh
+  arrival (whose score is ≥ 0), so every queued request is admitted within
+  a bounded number of ticks (asserted in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request against the CollaFuse serving endpoint."""
+
+    req_id: int
+    key: Any                    # PRNGKey; lane i uses fold_in(key, i)
+    batch: int = 1              # images requested (slots occupied)
+    cut_ratio: float = 0.5      # c: server runs (1-c)·T steps, client c·T
+    client_idx: int = 0         # which private model finishes t_split..1
+    arrival_tick: int = 0       # not visible to the engine before this tick
+
+    def __post_init__(self):
+        assert self.batch >= 1, self.batch
+        assert 0.0 <= self.cut_ratio <= 1.0, self.cut_ratio
+
+
+class FIFOScheduler:
+    """Strict arrival order (head-of-line blocking)."""
+
+    def __init__(self):
+        self._queue: List[Request] = []
+        self._seq = itertools.count()
+        self._order = {}
+
+    def add(self, req: Request) -> None:
+        self._order[req.req_id] = next(self._seq)
+        self._queue.append(req)
+        self._queue.sort(key=lambda r: (r.arrival_tick,
+                                        self._order[r.req_id]))
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def arrived(self, now: int) -> List[Request]:
+        return [r for r in self._queue if r.arrival_tick <= now]
+
+    def next_arrival(self) -> Optional[int]:
+        return min((r.arrival_tick for r in self._queue), default=None)
+
+    def _candidates(self, now: int) -> List[Request]:
+        """Admission order — the only thing policies override."""
+        return self.arrived(now)
+
+    def select(self, free_slots: int, now: int) -> List[Request]:
+        """Admit in candidate order until one does not fit, which BLOCKS
+        everything ranked behind it.  Blocking (rather than letting
+        smaller later candidates leapfrog) is what turns each policy's
+        ordering into a liveness guarantee for batch > 1 requests: once a
+        request heads the order, freed slots accumulate for it until its
+        whole batch fits (batch ≤ capacity is asserted at engine
+        submit)."""
+        picked = []
+        for r in self._candidates(now):
+            if r.batch > free_slots:
+                break
+            picked.append(r)
+            free_slots -= r.batch
+        for r in picked:
+            self._queue.remove(r)
+        return picked
+
+
+class CutRatioScheduler(FIFOScheduler):
+    """Shortest-server-job-first over (1-c)·T with aging (no starvation)."""
+
+    def __init__(self, T: int, aging: float = 1.0):
+        super().__init__()
+        assert aging > 0.0, "aging=0 reintroduces starvation"
+        self.T = T
+        self.aging = aging
+
+    def _score(self, req: Request, now: int) -> float:
+        server_steps = (1.0 - req.cut_ratio) * self.T
+        wait = max(0, now - req.arrival_tick)
+        return server_steps - self.aging * wait
+
+    def _candidates(self, now: int) -> List[Request]:
+        """Aged-score order: once a starved request ages to the top it
+        heads the admission order and (via the base select's blocking)
+        collects freed slots until it fits."""
+        return sorted(
+            self.arrived(now),
+            key=lambda r: (self._score(r, now), self._order[r.req_id]))
+
+
+def make_scheduler(policy: str, T: int, aging: float = 1.0):
+    if policy == "fifo":
+        return FIFOScheduler()
+    if policy == "cut_ratio":
+        return CutRatioScheduler(T, aging=aging)
+    raise ValueError(f"unknown scheduling policy: {policy!r}")

@@ -110,6 +110,18 @@ def test_kid_near_zero_for_identical_sets(rng):
     assert abs(k_same) < 0.2 * abs(k_diff)
 
 
+def test_extract_features_chunked_is_bitwise_stable(rng):
+    """Serving-scale KID batches run through the chunked path; features are
+    per-image, so chunking must be exactly the one-shot path concatenated
+    — bitwise, so every downstream KID/MMD value is unchanged."""
+    fp = privacy.feature_params()
+    imgs = jax.random.normal(rng, (70, 16, 16, 1))
+    one_shot = privacy.extract_features(fp, imgs)           # n <= chunk
+    chunked = privacy.extract_features(fp, imgs, chunk_size=32)  # 3 chunks
+    assert chunked.shape == one_shot.shape
+    assert bool((np.asarray(chunked) == np.asarray(one_shot)).all())
+
+
 def test_kid_separates_distributions(rng):
     fp = privacy.feature_params()
     k1, k2 = jax.random.split(rng)

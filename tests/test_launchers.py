@@ -60,3 +60,19 @@ def test_serve_launcher_decodes():
                "--prompt-len", "8", "--tokens", "4")
     assert out.returncode == 0, out.stderr[-2000:]
     assert "serving loop OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_diffusion_launcher_continuous_batching(tmp_path):
+    """The continuous-batching diffusion engine on a real 4-way data mesh,
+    mixed cut-ratios and staggered arrivals, with the sequential-baseline
+    comparison and the JSON summary artefact."""
+    out_json = str(tmp_path / "serve.json")
+    out = _run("repro.launch.serve_diffusion", "--devices", "4",
+               "--mesh-shape", "4x1", "--slots", "8", "--requests", "12",
+               "--image", "8", "--T", "10", "--arrival-every", "1",
+               "--compare-sequential", "--json", out_json)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "serve_diffusion OK" in out.stdout
+    assert "speedup" in out.stdout
+    assert os.path.exists(out_json)
