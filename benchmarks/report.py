@@ -114,6 +114,23 @@ def serve_table(rec):
           f"| {rec['client_fraction']:.2f} |")
 
 
+def masked_step_table(rec):
+    print(f"fused masked denoise-tick kernel vs jnp masked chain — "
+          f"{rec['slots']} lanes, {rec['image']}x{rec['image']}x1, "
+          f"T={rec['T']}{' (toy)' if rec.get('toy') else ''}\n")
+    print("| path | bytes accessed | note |")
+    print("|---|---|---|")
+    print(f"| jnp chain (pre-fusion HLO) | {rec['bytes_jnp_hlo']:,.0f} "
+          "| operator-granularity HBM round-trips |")
+    print(f"| jnp chain (compiled) | {rec['bytes_jnp_compiled']:,.0f} "
+          "| after XLA CPU fusion |")
+    print(f"| fused kernel (CostEstimate) | "
+          f"{rec['bytes_fused_kernel']:,.0f} "
+          "| one read of (x, eps, z) + one write |")
+    print(f"\nbytes ratio (jnp chain / fused): "
+          f"**{rec['bytes_ratio']:.2f}x** (gate: >=2x)")
+
+
 def summary(recs):
     n = len(recs)
     dom = {}
@@ -151,6 +168,10 @@ def main():
     if serve:
         print("\n## §Serving (continuous batching)\n")
         serve_table(serve)
+    masked = _load_bench("masked_step")
+    if masked:
+        print("\n## §Fused masked denoise tick (StepBackend pallas_masked)\n")
+        masked_step_table(masked)
 
 
 if __name__ == "__main__":

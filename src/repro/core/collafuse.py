@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.diffusion import ddpm
+from repro.diffusion.backend import BackendLike
 from repro.diffusion.schedule import DiffusionSchedule
 
 
@@ -138,7 +139,7 @@ def make_pooled_server_batch(sched: DiffusionSchedule, plan: CutPlan,
 def split_sample(sched: DiffusionSchedule, plan: CutPlan,
                  server_fn: Callable, client_fn: Callable, key, shape,
                  return_intermediate: bool = False,
-                 use_kernel: bool = False):
+                 backend: BackendLike = None):
     """Full CollaFuse generation.
 
     1. client draws x_T ~ N(0, I);
@@ -146,19 +147,21 @@ def split_sample(sched: DiffusionSchedule, plan: CutPlan,
     3. x_{t_split} crosses back to the client (the DISCLOSED tensor);
     4. client finishes t = t_split … 1 with its private model.
 
-    Returns x_0 (and x_{t_split} if ``return_intermediate``).
+    ``backend`` selects the step backend for both segments (see
+    ``repro.diffusion.backend``).  Returns x_0 (and x_{t_split} if
+    ``return_intermediate``).
     """
     k_init, k_srv, k_cli = jax.random.split(key, 3)
     x_t = jax.random.normal(k_init, shape, jnp.float32)
     if plan.n_server_steps > 0:
         x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t,
                                   plan.T, plan.t_split + 1,
-                                  use_kernel=use_kernel)
+                                  backend=backend)
     else:
         x_mid = x_t
     if plan.n_client_steps > 0:
         x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid,
-                               plan.t_split, 1, use_kernel=use_kernel)
+                               plan.t_split, 1, backend=backend)
     else:
         x0 = x_mid
     if return_intermediate:
@@ -185,7 +188,7 @@ def lane_keys(req_key, batch: int):
 def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
                       server_fn: Callable, client_fn: Callable, lane_key,
                       shape, return_intermediate: bool = False,
-                      use_kernel: bool = False):
+                      backend: BackendLike = None):
     """Single-image reference for one engine lane: the exact computation the
     continuous-batching engine must reproduce for image i of a request when
     handed ``lane_keys(req_key, batch)[·][i]``'s parent ``fold_in`` key.
@@ -199,12 +202,12 @@ def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
     if plan.n_server_steps > 0:
         x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t[None],
                                   plan.T, plan.t_split + 1,
-                                  use_kernel=use_kernel)[0]
+                                  backend=backend)[0]
     else:
         x_mid = x_t
     if plan.n_client_steps > 0:
         x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid[None],
-                               plan.t_split, 1, use_kernel=use_kernel)[0]
+                               plan.t_split, 1, backend=backend)[0]
     else:
         x0 = x_mid
     if return_intermediate:
@@ -213,7 +216,8 @@ def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
 
 
 def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
-                       server_fn: Callable, key, x0_client):
+                       server_fn: Callable, key, x0_client,
+                       backend: BackendLike = None):
     """What the server *could* reconstruct of a real client image: noise the
     client's x_0 to x_T, denoise on the server down to t_split (paper Fig. 1
     columns).  Used by the disclosure benchmarks."""
@@ -225,7 +229,7 @@ def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
     if plan.n_server_steps == 0:
         return x_T
     return ddpm.sample_range(sched, server_fn, k_s, x_T,
-                             plan.T, plan.t_split + 1)
+                             plan.T, plan.t_split + 1, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,137 @@
+"""StepBackend: who executes one denoise tick.
+
+Every hot loop in this repo — ``ddpm.sample_range``, the CollaFuse split
+samplers, and the serving engine's masked per-slot tick — bottoms out in the
+same primitive: one reverse-diffusion update x_t -> x_{t-1}, the reference
+sampler's post-step clip, and (on slot arrays) the active-lane select.  A
+:class:`StepBackend` owns all three, so callers thread ONE object (or its
+registry name) instead of copy-pasting kernel-selection booleans through
+every layer, and every future step variant (DDIM, guidance, quantized
+iterates) plugs in as a new registered backend.
+
+Registered backends:
+
+``"jnp"``            pure-jnp reference: ``ddpm.p_sample`` + clip (+ where).
+``"pallas"``         Pallas fused update kernel (``kernels/ddpm_step.py``),
+                     clip and active-select still in jnp.
+``"pallas_masked"``  ONE fused Pallas program for the whole masked tick:
+                     per-lane schedule gather from SMEM by (clamped) t,
+                     update, clip, and active-lane select in a single read
+                     of (x, eps_hat, noise) + one write.
+
+All backends agree numerically on active lanes (the Pallas kernels compute
+the identical f32 expression, modulo rsqrt-vs-divide rounding ~1e-7), and
+``masked_step`` with ``active=ones`` is bitwise ``step`` for every backend.
+Inactive lanes always pass through bit-unchanged, even at out-of-range t.
+
+The Pallas backends honour ``REPRO_PALLAS_INTERPRET`` (see ``kernels/ops``):
+interpret mode on CPU, compiled Mosaic on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+
+
+class StepBackend:
+    """Owns the denoise update, the post-step clip, and the active select.
+
+    ``step(sched, x, t, eps_hat, noise, clip=...)`` advances every sample;
+    ``masked_step(..., active, tables=...)`` advances a slot array with
+    heterogeneous per-lane timesteps: lanes where ``active`` step (t is
+    clamped into {1..T} first so retired/empty lanes index in-range schedule
+    entries), inactive lanes pass through bit-unchanged.  ``tables`` lets a
+    caller with a long-lived schedule (the serving engine) hoist the
+    per-step coefficient-table build out of the tick; backends that do not
+    consume tables ignore it.
+    """
+
+    name: str = "abstract"
+
+    def step(self, sched, x, t, eps_hat, noise, *, clip: float = 3.0):
+        raise NotImplementedError
+
+    def masked_step(self, sched, x, t, eps_hat, noise, active, *,
+                    clip: float = 3.0, tables=None):
+        del tables                       # only the fused backend stages them
+        t_safe = jnp.clip(t, 1, sched.T)
+        x_new = self.step(sched, x, t_safe, eps_hat, noise, clip=clip)
+        m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
+        return jnp.where(m, x_new, x)
+
+
+_REGISTRY: Dict[str, StepBackend] = {}
+
+BackendLike = Optional[Union[str, StepBackend]]
+
+
+def register(cls):
+    """Class decorator: instantiate and expose under ``cls.name``."""
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_backend(spec: BackendLike = None) -> StepBackend:
+    """Resolve a backend name (or pass an instance through).  None = "jnp"."""
+    if spec is None:
+        return _REGISTRY["jnp"]
+    if isinstance(spec, StepBackend):
+        return spec
+    try:
+        return _REGISTRY[spec]
+    except KeyError:
+        raise ValueError(f"unknown step backend {spec!r}; "
+                         f"available: {available()}") from None
+
+
+def available():
+    return sorted(_REGISTRY)
+
+
+@register
+class JnpStepBackend(StepBackend):
+    """Pure-jnp reference path (XLA decides all fusion)."""
+
+    name = "jnp"
+
+    def step(self, sched, x, t, eps_hat, noise, *, clip: float = 3.0):
+        from repro.diffusion import ddpm               # import cycle: lazy
+        x = ddpm.p_sample(sched, x, t, eps_hat, noise)
+        if clip:
+            x = jnp.clip(x, -clip, clip)
+        return x
+
+
+@register
+class PallasStepBackend(StepBackend):
+    """Pallas fused update; clip + masked select stay in jnp."""
+
+    name = "pallas"
+
+    def step(self, sched, x, t, eps_hat, noise, *, clip: float = 3.0):
+        from repro.kernels import ops as kops
+        x = kops.ddpm_step(sched, x, t, eps_hat, noise)
+        if clip:
+            x = jnp.clip(x, -clip, clip)
+        return x
+
+
+@register
+class PallasMaskedStepBackend(StepBackend):
+    """ONE fused Pallas program per tick: SMEM schedule gather by per-lane
+    t, update, clip, and active select in a single read+write of the slot
+    array (collapsing the jnp chain's ~4+ HBM round-trips — gated ≥2x fewer
+    bytes in ``benchmarks.run --only masked_step``)."""
+
+    name = "pallas_masked"
+
+    def step(self, sched, x, t, eps_hat, noise, *, clip: float = 3.0):
+        ones = jnp.ones((x.shape[0],), bool)
+        return self.masked_step(sched, x, t, eps_hat, noise, ones, clip=clip)
+
+    def masked_step(self, sched, x, t, eps_hat, noise, active, *,
+                    clip: float = 3.0, tables=None):
+        from repro.kernels import ops as kops
+        return kops.ddpm_masked_step(sched, x, t, eps_hat, noise, active,
+                                     clip=clip, tables=tables)

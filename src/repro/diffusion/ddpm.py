@@ -15,6 +15,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.diffusion.backend import BackendLike, get_backend
 from repro.diffusion.schedule import DiffusionSchedule
 
 
@@ -52,7 +53,9 @@ def ddpm_loss(sched: DiffusionSchedule, model_fn: Callable, key, x0,
 def p_sample(sched: DiffusionSchedule, x_t, t, eps_hat, noise):
     """One reverse step x_{t-1} ~ p(x_{t-1} | x_t) given predicted noise.
 
-    t: (B,) int32; ``noise`` must be zeros where t == 1.
+    t: (B,) int32 in {1..T}.  ``noise`` may hold anything where t == 1: the
+    step masks the noise term itself (``is_last``), so the final step is
+    deterministic given (x_t, eps_hat) — callers need not zero it.
     """
     ti = t - 1
     beta = _bcast(sched.betas, ti, x_t.ndim)
@@ -65,43 +68,40 @@ def p_sample(sched: DiffusionSchedule, x_t, t, eps_hat, noise):
 
 
 def denoise_step(sched: DiffusionSchedule, x, t, eps_hat, noise,
-                 use_kernel: bool = False, clip: float = 3.0):
+                 backend: BackendLike = None, clip: float = 3.0):
     """One reverse step plus the reference sampler's post-step clip.
 
-    ``clip`` bounds the iterate (the ``clip_denoised`` stabilisation of
-    Ho et al.'s reference sampler — without it an undertrained εθ diverges
-    geometrically through the 1/sqrt(alpha) factor).  0 disables.  Shared
-    by :func:`sample_range` and the serving engine's masked tick so the two
-    paths stay numerically identical step-for-step.
+    ``backend`` names (or is) the :class:`~repro.diffusion.backend
+    .StepBackend` owning the update — "jnp" (default), "pallas", or
+    "pallas_masked".  ``clip`` bounds the iterate (the ``clip_denoised``
+    stabilisation of Ho et al.'s reference sampler — without it an
+    undertrained εθ diverges geometrically through the 1/sqrt(alpha)
+    factor).  0 disables.  Shared by :func:`sample_range` and the serving
+    engine's masked tick so the two paths stay numerically identical
+    step-for-step.
     """
-    if use_kernel:
-        from repro.kernels import ops as kops
-        x = kops.ddpm_step(sched, x, t, eps_hat, noise)
-    else:
-        x = p_sample(sched, x, t, eps_hat, noise)
-    if clip:
-        x = jnp.clip(x, -clip, clip)
-    return x
+    return get_backend(backend).step(sched, x, t, eps_hat, noise, clip=clip)
 
 
 def p_sample_masked(sched: DiffusionSchedule, x, t, eps_hat, noise, active,
-                    use_kernel: bool = False, clip: float = 3.0):
+                    backend: BackendLike = None, clip: float = 3.0,
+                    tables=None):
     """Masked reverse step over a slot array: lanes where ``active`` advance
     x_t -> x_{t-1} (with the same clip as :func:`sample_range`); inactive
     lanes pass through bit-unchanged.  ``t`` is clamped into {1..T} so
     retired/empty lanes gather in-range schedule entries.  This is the
     per-slot step of ``repro.serve.engine`` — one program over the whole
-    slot array with heterogeneous per-lane timesteps.
+    slot array with heterogeneous per-lane timesteps; under the
+    "pallas_masked" backend the whole thing is ONE fused kernel.
+    ``tables`` (optional, consumed by the fused backend) hoists the
+    coefficient-table build out of repeated ticks.
     """
-    t_safe = jnp.clip(t, 1, sched.T)
-    x_new = denoise_step(sched, x, t_safe, eps_hat, noise,
-                         use_kernel=use_kernel, clip=clip)
-    m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
-    return jnp.where(m, x_new, x)
+    return get_backend(backend).masked_step(sched, x, t, eps_hat, noise,
+                                            active, clip=clip, tables=tables)
 
 
 def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
-                 t_from: int, t_to: int, use_kernel: bool = False,
+                 t_from: int, t_to: int, backend: BackendLike = None,
                  clip: float = 3.0):
     """Run the reverse chain from t_from down to t_to (inclusive).
 
@@ -117,6 +117,7 @@ def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
     if t_from < t_to:
         return x_start
     b = x_start.shape[0]
+    backend = get_backend(backend)
 
     def body(i, carry):
         x, k = carry
@@ -125,8 +126,7 @@ def sample_range(sched: DiffusionSchedule, model_fn: Callable, key, x_start,
         tb = jnp.full((b,), t, jnp.int32)
         eps_hat = model_fn(x, tb)
         noise = jax.random.normal(k_n, x.shape, x.dtype)
-        x = denoise_step(sched, x, tb, eps_hat, noise,
-                         use_kernel=use_kernel, clip=clip)
+        x = backend.step(sched, x, tb, eps_hat, noise, clip=clip)
         return (x, k)
 
     x, _ = jax.lax.fori_loop(0, t_from - t_to + 1, body, (x_start, key))

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,6 +26,16 @@ class DiffusionSchedule:
     @property
     def T(self) -> int:
         return int(self.betas.shape[0])
+
+
+# Registered as a pytree (all-array leaves) so jitted step wrappers — e.g.
+# the kernels/ops.py backends — can take a schedule as a traced argument
+# instead of closing over it.
+jax.tree_util.register_dataclass(
+    DiffusionSchedule,
+    data_fields=["betas", "alphas", "alpha_bar", "sqrt_alpha_bar",
+                 "sqrt_one_minus_alpha_bar", "posterior_var"],
+    meta_fields=[])
 
 
 def cosine_schedule(T: int, s: float = 0.008) -> DiffusionSchedule:

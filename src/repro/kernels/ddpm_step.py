@@ -1,18 +1,28 @@
-"""Pallas TPU fused DDPM denoise-update kernel.
+"""Pallas TPU fused DDPM denoise-update kernels.
 
 The p_sample update  x_{t-1} = (x_t − β/√(1−ᾱ)·ε̂)/√α + σ·z  is executed T
 times per generated image — the paper's inner loop.  Unfused it is 4 HBM
-round-trips of the image tensor; this kernel fuses it into one read of
+round-trips of the image tensor; :func:`ddpm_step` fuses it into one read of
 (x_t, ε̂, z) + one write, with the per-sample scalar coefficients staged in
 SMEM.
+
+:func:`ddpm_masked_step` is the serving engine's whole tick as ONE program:
+per-lane schedule-coefficient gather from an SMEM (3, T) table by (clamped)
+per-lane t, the update, the reference sampler's post-step clip, and the
+active-lane select — collapsing the jnp chain gather→step→clip→where (≈4+
+HBM round-trips of the slot array) into a single read of (x, ε̂, z) + one
+write.  Inactive lanes pass through bit-unchanged, including out-of-range t.
 
 Grid: (batch, pixel_blocks); block = (1, 512·8) lanes — pure VPU work, no MXU.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _step_kernel(x_ref, eps_ref, noise_ref, coef_ref, o_ref):
@@ -72,3 +82,105 @@ def ddpm_step(x_t, eps_hat, noise, coefs, *, block: int = 4096,
     if pad:
         out = out[:, :d]
     return out.reshape(x_t.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused masked tick: gather + step + clip + active-select in one program
+# ---------------------------------------------------------------------------
+def masked_step_tables(sched) -> jnp.ndarray:
+    """(3, T) f32 schedule table the masked kernel gathers from SMEM.
+
+    Row r, column t-1 holds the step-t coefficient: r=0 ε̂-scale β/√(1−ᾱ),
+    r=1 1/√α, r=2 posterior σ.  Long-lived callers (the serving engine)
+    build this ONCE per schedule and pass it to every tick, hoisting the
+    per-step coefficient recompute out of the hot loop entirely.
+    """
+    return jnp.stack([sched.betas / sched.sqrt_one_minus_alpha_bar,
+                      jax.lax.rsqrt(sched.alphas),
+                      jnp.sqrt(sched.posterior_var)])
+
+
+def masked_step_bytes(x, T: int, *, block: int = 4096) -> int:
+    """HBM bytes the fused masked kernel advertises to XLA (its
+    ``pl.CostEstimate``): one read of (x, ε̂, z) + one write of the output
+    — accounting the block padding the kernel actually streams — plus the
+    SMEM-staged (3, T) table and per-lane (S, 3) meta ints."""
+    s = x.shape[0]
+    d = x.size // s
+    blk = min(block, d)
+    dp = d + ((-d) % blk)
+    return 4 * s * dp * x.dtype.itemsize + 3 * T * 4 + s * 3 * 4
+
+
+def _masked_step_kernel(meta_ref, tab_ref, x_ref, eps_ref, noise_ref, o_ref,
+                        *, clip):
+    """meta: (1, 3) i32 = (t_safe - 1, keep_noise, active) in SMEM;
+    tab: (3, T) f32 in SMEM; x/eps/noise/o: (1, blk) VMEM blocks."""
+    ti = meta_ref[0, 0]
+    keep = meta_ref[0, 1].astype(jnp.float32)
+    act = meta_ref[0, 2]
+    c_eps = tab_ref[0, ti]
+    inv_sa = tab_ref[1, ti]
+    sigma = tab_ref[2, ti]
+    x_in = x_ref[...]
+    x = x_in.astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    z = noise_ref[...].astype(jnp.float32)
+    new = (x - c_eps * eps) * inv_sa + keep * sigma * z
+    if clip:
+        new = jnp.clip(new, -clip, clip)
+    # scalar predicate: active lanes take the stepped value, inactive lanes
+    # emit their input block bit-for-bit
+    o_ref[...] = jnp.where(act > 0, new.astype(o_ref.dtype), x_in)
+
+
+def ddpm_masked_step(x, t, eps_hat, noise, active, tables, *,
+                     clip: float = 3.0, block: int = 4096,
+                     interpret: bool = True):
+    """Fused masked denoise tick over a slot array.
+
+    x/eps_hat/noise: (S, ...); t: (S,) int32 (ANY value — clamped into
+    {1..T} so idle lanes gather in-range entries); active: (S,) bool;
+    tables: ``masked_step_tables(sched)``.  Per lane: where active,
+    x <- clip(p_sample(x, t_safe), ±clip); otherwise x passes through
+    bit-unchanged.  At t_safe == 1 the noise term is dropped (keep flag),
+    matching ``ddpm.p_sample``'s deterministic last step.
+    """
+    s = x.shape[0]
+    T = tables.shape[1]
+    t_safe = jnp.clip(t, 1, T)
+    meta = jnp.stack([t_safe - 1, (t_safe > 1).astype(jnp.int32),
+                      active.astype(jnp.int32)], axis=-1)
+    flat = x.reshape(s, -1)
+    d = flat.shape[1]
+    blk = min(block, d)
+    pad = (-d) % blk
+    eps2 = eps_hat.reshape(s, -1)
+    z2 = noise.reshape(s, -1)
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        eps2 = jnp.pad(eps2, ((0, 0), (0, pad)))
+        z2 = jnp.pad(z2, ((0, 0), (0, pad)))
+    dp = flat.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_masked_step_kernel, clip=float(clip)),
+        grid=(s, dp // blk),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda ib, ic: (ib, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((3, T), lambda ib, ic: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
+        out_shape=jax.ShapeDtypeStruct((s, dp), x.dtype),
+        cost_estimate=pl.CostEstimate(
+            flops=7 * s * dp, transcendentals=0,
+            bytes_accessed=masked_step_bytes(x, T, block=block)),
+        interpret=interpret,
+    )(meta, tables, flat, eps2, z2)
+    if pad:
+        out = out[:, :d]
+    return out.reshape(x.shape)

@@ -34,8 +34,26 @@ def ssm_scan(x, dt, a, bm, cm, *, chunk: int = 128, head_block: int = 8):
                          head_block=head_block, interpret=_interpret())
 
 
+@jax.jit
 def ddpm_step(sched, x_t, t, eps_hat, noise):
-    """Fused denoise update; drop-in for diffusion.ddpm.p_sample."""
+    """Fused denoise update; drop-in for diffusion.ddpm.p_sample.
+
+    ``sched`` is a :class:`~repro.diffusion.schedule.DiffusionSchedule`
+    (a registered pytree, so it traces like any other argument).
+    """
     coefs = _ddpm.ddpm_step_coefs(sched, t)
     return _ddpm.ddpm_step(x_t, eps_hat, noise, coefs,
                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("clip",))
+def ddpm_masked_step(sched, x_t, t, eps_hat, noise, active, *,
+                     clip: float = 3.0, tables=None):
+    """Fused masked tick: SMEM schedule gather by per-lane t + update +
+    clip + active-lane select in ONE pallas program (the serving engine's
+    per-tick hot loop).  Pass ``tables=masked_step_tables(sched)`` to reuse
+    a prebuilt coefficient table across ticks."""
+    if tables is None:
+        tables = _ddpm.masked_step_tables(sched)
+    return _ddpm.ddpm_masked_step(x_t, t, eps_hat, noise, active, tables,
+                                  clip=clip, interpret=_interpret())

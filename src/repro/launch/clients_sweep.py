@@ -28,6 +28,9 @@ def _parse_args(argv=None):
     ap.add_argument("--image", type=int, default=8)
     ap.add_argument("--T", type=int, default=20)
     ap.add_argument("--cut-ratio", type=float, default=0.8)
+    ap.add_argument("--step-backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_masked"],
+                    help="denoise-tick StepBackend used by trainer.sample")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU dry environments)")
     ap.add_argument("--mesh-shape", default="",
@@ -82,7 +85,8 @@ def main(argv=None):
     with mesh_context(mesh):
         for n in args.clients:
             cfg = TrainerConfig(n_clients=n, T=args.T,
-                                cut_ratio=args.cut_ratio)
+                                cut_ratio=args.cut_ratio,
+                                step_backend=args.step_backend)
             tr = CollaFuseTrainer(cfg, init_fn, apply_fn, mesh=mesh)
             batches = data_for(n)
             sec, metrics = timed_rounds(tr, batches)

@@ -31,6 +31,11 @@ def _parse_args(argv=None):
                     help="private client models finishing t_split..1")
     ap.add_argument("--policy", choices=["fifo", "cut_ratio"],
                     default="cut_ratio")
+    ap.add_argument("--step-backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_masked"],
+                    help="denoise-tick StepBackend; pallas_masked fuses the "
+                         "whole masked tick into one kernel (interpret mode "
+                         "unless REPRO_PALLAS_INTERPRET=0)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="0 = all at tick 0; k = one request every k ticks")
     ap.add_argument("--devices", type=int, default=0,
@@ -64,7 +69,8 @@ def main(argv=None):
 
     d, m = mesh.shape["data"], mesh.shape["model"]
     print(f"serve_diffusion: mesh=data:{d}xmodel:{m} slots={args.slots} "
-          f"requests={args.requests} T={args.T} policy={args.policy}")
+          f"requests={args.requests} T={args.T} policy={args.policy} "
+          f"backend={args.step_backend}")
 
     ucfg = dataclasses.replace(
         UNetConfig().reduced(), image_size=args.image, base_channels=8,
@@ -97,7 +103,8 @@ def main(argv=None):
         eng = ServeEngine(
             sched, apply_fn, server_params, (args.image, args.image, 1),
             slots=args.slots,
-            scheduler=make_scheduler(args.policy, args.T), mesh=mesh)
+            scheduler=make_scheduler(args.policy, args.T),
+            step_backend=args.step_backend, mesh=mesh)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
         res = eng.serve(list(requests), client_stack)      # warm jit cache

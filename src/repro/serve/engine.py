@@ -12,8 +12,11 @@ diffusion analogue of LLM continuous batching:
   of SLOTS, one image ("lane") per slot.
 * Every engine tick runs ONE jitted masked denoise step across the whole
   slot array — per-slot timestep counters step t_i -> t_i-1; retired/empty
-  slots are masked out (``ddpm.p_sample_masked``) — so server throughput is
-  O(1) dispatches per tick regardless of how many requests are in flight.
+  slots are masked out.  The step itself is a ``StepBackend``
+  (``repro.diffusion.backend``) taken once at construction; under
+  ``"pallas_masked"`` the whole gather→step→clip→select tick is ONE fused
+  Pallas program — so server throughput is O(1) dispatches per tick
+  regardless of how many requests are in flight.
 * When a slot reaches its request's t_split the engine retires it and
   emits x_{t_split} (the DISCLOSED tensor of the protocol); freed slots are
   refilled from the queue mid-flight, between ticks.
@@ -31,6 +34,7 @@ asserted in tests/test_serve.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -40,8 +44,9 @@ import numpy as np
 
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
-from repro.diffusion import ddpm
+from repro.diffusion.backend import BackendLike, get_backend
 from repro.diffusion.schedule import DiffusionSchedule
+from repro.kernels.ddpm_step import masked_step_tables
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import FIFOScheduler, Request
 
@@ -75,12 +80,19 @@ class ServeEngine:
     :meth:`serve`) the [n_clients, ...] stacked private models.  Pass
     ``mesh`` to pin the slot array onto the ``data`` axis — the tick then
     runs as the pjit program ``launch/serve_diffusion.py`` lowers.
+
+    ``step_backend`` names (or is) the StepBackend executing the masked
+    denoise update (``repro.diffusion.backend``): resolved ONCE here, bound
+    together with the clip and the hoisted (3, T) coefficient table into
+    ``self._masked_step``, which both the tick and the client finisher call
+    — no per-tick coefficient recompute, no flag re-derivation in
+    ``_make_tick``/``_make_finish``.
     """
 
     def __init__(self, sched: DiffusionSchedule, apply_fn: Callable,
                  server_params, image_shape, *, slots: int = 32,
                  scheduler=None, clip: float = 3.0,
-                 use_kernel: bool = False, mesh=None,
+                 step_backend: BackendLike = None, mesh=None,
                  flops_per_call: Optional[float] = None):
         self.sched = sched
         self.apply_fn = apply_fn
@@ -90,7 +102,12 @@ class ServeEngine:
         self.scheduler = scheduler if scheduler is not None \
             else FIFOScheduler()
         self.clip = clip
-        self.use_kernel = use_kernel
+        self.backend = get_backend(step_backend)
+        # hoisted out of the tick: one (3, T) schedule table, gathered
+        # per-lane in SMEM by the fused kernel (ignored by jnp backends)
+        self._masked_step = functools.partial(
+            self.backend.masked_step, sched, clip=clip,
+            tables=masked_step_tables(sched))
         self.mesh = mesh
         n_params = sum(x.size for x in jax.tree.leaves(server_params))
         # forward-only proxy (inference): ~2 FLOP per param per call
@@ -137,10 +154,8 @@ class ServeEngine:
             k_next, k_n = ks[:, 0], ks[:, 1]
             noise = jax.vmap(
                 lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
-            x = ddpm.p_sample_masked(sched, state["x"], state["t"], eps_hat,
-                                     noise, stepping,
-                                     use_kernel=self.use_kernel,
-                                     clip=self.clip)
+            x = self._masked_step(state["x"], state["t"], eps_hat, noise,
+                                  stepping)
             t = jnp.where(stepping, state["t"] - 1, state["t"])
             key = jnp.where(stepping[:, None], k_next, state["key"])
             done = stepping & (t <= state["t_split"])   # now holds x_{t_split}
@@ -170,9 +185,7 @@ class ServeEngine:
                 k_next, k_n = ks[:, 0], ks[:, 1]
                 noise = jax.vmap(
                     lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
-                xc = ddpm.p_sample_masked(sched, xc, t, eps, noise, active,
-                                          use_kernel=self.use_kernel,
-                                          clip=self.clip)
+                xc = self._masked_step(xc, t, eps, noise, active)
                 t = jnp.where(active, t - 1, t)
                 key = jnp.where(active[:, None], k_next, key)
                 return (xc, t, key)
@@ -217,6 +230,8 @@ class ServeEngine:
         tick until drained, retire x_{t_split} per request.  Completions
         carry ``x_mid`` only; :meth:`serve` adds the client finish."""
         T = self.sched.T
+        assert len({r.req_id for r in requests}) == len(requests), \
+            "duplicate req_ids: completions/inflight are keyed by req_id"
         for r in requests:
             assert r.batch <= self.slots, \
                 f"request {r.req_id} batch {r.batch} > capacity {self.slots}"

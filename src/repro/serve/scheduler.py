@@ -24,9 +24,15 @@ import itertools
 from typing import Any, List, Optional
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request against the CollaFuse serving endpoint."""
+    """One generation request against the CollaFuse serving endpoint.
+
+    ``eq=False``: requests compare by identity.  The generated field-wise
+    ``__eq__`` would compare the PRNG ``key`` arrays (ambiguous-truth-value
+    crash in ``list.remove``) and would let two distinct same-content
+    requests alias each other in the queue.
+    """
 
     req_id: int
     key: Any                    # PRNGKey; lane i uses fold_in(key, i)

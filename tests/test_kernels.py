@@ -3,9 +3,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+import numpy as np
+
 from repro.diffusion.schedule import cosine_schedule
 from repro.kernels import ref
-from repro.kernels.ddpm_step import ddpm_step, ddpm_step_coefs
+from repro.kernels.ddpm_step import (ddpm_masked_step, ddpm_step,
+                                     ddpm_step_coefs, masked_step_tables)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
 
@@ -150,3 +153,91 @@ def test_ddpm_step_t1_is_deterministic(rng):
     o1 = ddpm_step(x, eps, jax.random.normal(ks[2], shape), c)
     o2 = ddpm_step(x, eps, 100.0 + jax.random.normal(ks[2], shape), c)
     assert jnp.allclose(o1, o2)
+
+
+# ---------------------------------------------------------------------------
+# fused masked tick kernel (gather + step + clip + select in one program)
+# ---------------------------------------------------------------------------
+def _masked_case(rng, T=20, slots=6, shape=(8, 8, 1), dtype=jnp.float32):
+    sched = cosine_schedule(T)
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], (slots,) + shape, dtype)
+    eps = jax.random.normal(ks[1], x.shape, dtype)
+    z = jax.random.normal(ks[2], x.shape, dtype)
+    # mixed per-lane t: in-range, t==1, and idle-lane junk (0, negative, >T)
+    t = jnp.array([T, 1, T // 2, 0, -3, T + 7], jnp.int32)[:slots]
+    active = jnp.array([True, True, True, False, False, False])[:slots]
+    return sched, x, t, eps, z, active
+
+
+def test_masked_step_matches_jnp_masked_reference(rng):
+    """Active lanes ≡ the jnp gather→step→clip→where chain, per lane."""
+    from repro.diffusion import ddpm as dmod
+    sched, x, t, eps, z, active = _masked_case(rng)
+    out = ddpm_masked_step(x, t, eps, z, active, masked_step_tables(sched))
+    expected = dmod.p_sample_masked(sched, x, t, eps, z, active)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_step_inactive_lanes_bit_passthrough(dtype, rng):
+    """Inactive lanes emit their input block bit-for-bit even when their t
+    is out of range (retired/empty slots carry junk counters)."""
+    sched, x, t, eps, z, active = _masked_case(rng, dtype=dtype)
+    out = ddpm_masked_step(x, t, eps, z, active, masked_step_tables(sched))
+    view = np.uint32 if dtype == jnp.float32 else np.uint16
+    for lane in np.nonzero(~np.asarray(active))[0]:
+        np.testing.assert_array_equal(
+            np.asarray(out[lane]).view(view),
+            np.asarray(x[lane]).view(view), err_msg=f"lane {lane}")
+
+
+def test_masked_step_t1_edge_is_noise_independent(rng):
+    """The t==1 keep flag survives the fusion: the last step adds no noise."""
+    sched, x, t, eps, z, active = _masked_case(rng)
+    tab = masked_step_tables(sched)
+    o1 = ddpm_masked_step(x, t, eps, z, active, tab)
+    o2 = ddpm_masked_step(x, t, eps, z + 100.0, active, tab)
+    np.testing.assert_array_equal(np.asarray(o1[1]), np.asarray(o2[1]))
+
+
+def test_masked_step_clip_is_fused(rng):
+    """Active lanes respect the post-step bound; clip=0 disables it and
+    reproduces the raw p_sample values."""
+    from repro.diffusion import ddpm as dmod
+    sched, x, t, eps, z, active = _masked_case(rng)
+    tab = masked_step_tables(sched)
+    bounded = ddpm_masked_step(x * 50.0, t, eps, z, active, tab, clip=3.0)
+    assert float(jnp.abs(bounded[np.asarray(active)]).max()) <= 3.0
+    raw = ddpm_masked_step(x, t, eps, z, active, tab, clip=0.0)
+    t_safe = jnp.clip(t, 1, sched.T)
+    expected = dmod.p_sample(sched, x, t_safe, eps, z)
+    for lane in np.nonzero(np.asarray(active))[0]:
+        np.testing.assert_allclose(np.asarray(raw[lane]),
+                                   np.asarray(expected[lane]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_masked_step_nondividing_block_padding(rng):
+    """Pixel counts that don't divide the block are padded and sliced back."""
+    from repro.diffusion import ddpm as dmod
+    sched, x, t, eps, z, active = _masked_case(rng, shape=(5, 7, 1))
+    out = ddpm_masked_step(x, t, eps, z, active, masked_step_tables(sched),
+                           block=16)
+    expected = dmod.p_sample_masked(sched, x, t, eps, z, active)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_masked_step_ops_wrapper_builds_tables(rng):
+    """kernels.ops.ddpm_masked_step == raw kernel with explicit tables, and
+    accepts a prebuilt table (the serving engine's hoisted path)."""
+    from repro.kernels import ops
+    sched, x, t, eps, z, active = _masked_case(rng)
+    tab = masked_step_tables(sched)
+    a = ops.ddpm_masked_step(sched, x, t, eps, z, active)
+    b = ops.ddpm_masked_step(sched, x, t, eps, z, active, tables=tab)
+    c = ddpm_masked_step(x, t, eps, z, active, tab)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))

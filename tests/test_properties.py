@@ -71,6 +71,54 @@ def test_schedules_well_formed(T):
 
 
 # ---------------------------------------------------------------------------
+# Step backends: masked(active=ones) ≡ step bitwise; inactive passthrough
+# ---------------------------------------------------------------------------
+BACKENDS = ["jnp", "pallas", "pallas_masked"]
+
+
+@given(T=st.integers(2, 40), seed=st.integers(0, 2**31 - 1),
+       backend=st.sampled_from(BACKENDS))
+@settings(max_examples=12, deadline=None)
+def test_masked_step_with_all_active_is_denoise_step_bitwise(T, seed,
+                                                             backend):
+    """For EVERY backend, the active-lane select is exact: p_sample_masked
+    with active=ones must equal denoise_step bit-for-bit (same backend)."""
+    sched = cosine_schedule(T)
+    key = jax.random.PRNGKey(seed)
+    b = 4
+    x = jax.random.normal(key, (b, 8))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), (b, 8))
+    z = jax.random.normal(jax.random.fold_in(key, 2), (b, 8))
+    t = 1 + jax.random.randint(jax.random.fold_in(key, 3), (b,), 0, T)
+    masked = ddpm.p_sample_masked(sched, x, t, eps, z,
+                                  jnp.ones((b,), bool), backend=backend)
+    stepped = ddpm.denoise_step(sched, x, t, eps, z, backend=backend)
+    assert (np.asarray(masked).view(np.uint32) ==
+            np.asarray(stepped).view(np.uint32)).all()
+
+
+@given(T=st.integers(2, 40), seed=st.integers(0, 2**31 - 1),
+       t_junk=st.integers(-10**6, 10**6))
+@settings(max_examples=12, deadline=None)
+def test_fused_kernel_inactive_lanes_bit_unchanged_any_t(T, seed, t_junk):
+    """Under the fused masked kernel, inactive lanes pass through with the
+    exact input bits for ARBITRARY (wildly out-of-range) per-lane t."""
+    sched = cosine_schedule(T)
+    key = jax.random.PRNGKey(seed)
+    b = 4
+    x = jax.random.normal(key, (b, 8))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), (b, 8))
+    z = jax.random.normal(jax.random.fold_in(key, 2), (b, 8))
+    t = jnp.array([t_junk, 1, t_junk, max(1, min(T, 3))], jnp.int32)
+    active = jnp.array([False, True, False, True])
+    out = ddpm.p_sample_masked(sched, x, t, eps, z, active,
+                               backend="pallas_masked")
+    for lane in (0, 2):
+        assert (np.asarray(out[lane]).view(np.uint32) ==
+                np.asarray(x[lane]).view(np.uint32)).all()
+
+
+# ---------------------------------------------------------------------------
 # MoE dispatch: capacity accounting
 # ---------------------------------------------------------------------------
 @given(n=st.integers(1, 64), k=st.integers(1, 4), e=st.integers(2, 16),

@@ -92,6 +92,27 @@ def test_p_sample_masked_inactive_lanes_bit_unchanged():
                                    np.asarray(ref[0]), rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("backend", ["pallas", "pallas_masked"])
+def test_p_sample_masked_backends_agree(backend):
+    """The kernel backends reproduce the jnp masked step on active lanes
+    (rsqrt-vs-divide rounding only) and bit-identically on inactive ones."""
+    sched = cosine_schedule(T)
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (5,) + SHAPE)
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x.shape)
+    noise = jax.random.normal(jax.random.fold_in(key, 2), x.shape)
+    t = jnp.array([T, 0, 3, -2, 1], jnp.int32)
+    active = jnp.array([True, False, True, False, True])
+    ref = ddpm.p_sample_masked(sched, x, t, eps, noise, active)
+    out = ddpm.p_sample_masked(sched, x, t, eps, noise, active,
+                               backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    for lane in (1, 3):
+        np.testing.assert_array_equal(np.asarray(out[lane]),
+                                      np.asarray(x[lane]))
+
+
 # ---------------------------------------------------------------------------
 # engine ≡ sample_range per request (the tentpole equivalence gate)
 # ---------------------------------------------------------------------------
@@ -106,6 +127,22 @@ def test_engine_matches_sample_range_per_request(models):
     eng = _engine(sched, server, scheduler=CutRatioScheduler(T))
     res = eng.serve(list(reqs), stack)
     assert set(res.completions) == {0, 1, 2}
+    for comp in res.completions.values():
+        _check_request_matches_reference(sched, server, stack, comp)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_masked"])
+def test_engine_step_backends_match_reference(models, backend):
+    """The engine produces reference-equivalent lanes under EVERY step
+    backend — the fused masked tick included (taken once at __init__)."""
+    sched, server, stack = models
+    reqs = [Request(req_id=0, key=jax.random.PRNGKey(800), batch=2,
+                    cut_ratio=0.5, client_idx=1),
+            Request(req_id=1, key=jax.random.PRNGKey(801), batch=1,
+                    cut_ratio=0.25, client_idx=0, arrival_tick=1)]
+    eng = _engine(sched, server, step_backend=backend)
+    assert eng.backend.name == backend
+    res = eng.serve(list(reqs), stack)
     for comp in res.completions.values():
         _check_request_matches_reference(sched, server, stack, comp)
 
@@ -252,6 +289,22 @@ def test_engine_completes_all_requests_within_bound(models):
         assert set(res.completions) == set(range(9)), policy
         for comp in res.completions.values():
             assert comp.x0 is not None and np.isfinite(comp.x0).all()
+
+
+def test_same_content_requests_do_not_alias_and_dup_ids_rejected(models):
+    """Requests compare by identity (eq=False): two same-content requests
+    with distinct req_ids are both served; duplicate req_ids are rejected
+    at submit (completions/inflight are keyed by req_id)."""
+    sched, server, stack = models
+    key = jax.random.PRNGKey(900)
+    twins = [Request(req_id=i, key=key, cut_ratio=0.5) for i in (0, 1)]
+    res = _engine(sched, server).serve(list(twins), stack)
+    assert set(res.completions) == {0, 1}
+    np.testing.assert_array_equal(res.completions[0].x0,
+                                  res.completions[1].x0)
+    dups = [Request(req_id=7, key=key), Request(req_id=7, key=key)]
+    with pytest.raises(AssertionError, match="duplicate req_id"):
+        _engine(sched, server).run(dups)
 
 
 def test_fifo_select_respects_head_of_line():
