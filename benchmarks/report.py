@@ -114,6 +114,24 @@ def serve_table(rec):
           f"| {rec['client_fraction']:.2f} |")
 
 
+def ddim_table(rec):
+    print(f"strided DDIM vs dense DDPM through the serving engine — "
+          f"{rec['n_requests']} requests (c={rec['cut_ratio']}) on "
+          f"{rec['slots']} slots, T={rec['T']}, K={rec['K']}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| sampler | server ticks | ticks/request | engine s "
+          "| server GFLOP |")
+    print("|---|---|---|---|---|")
+    for name, label in (("dense", f"DDPM T={rec['T']}"),
+                        ("ddim", f"DDIM K={rec['K']}")):
+        r = rec[name]
+        print(f"| {label} | {r['ticks']} | {r['ticks_per_request']:.2f} "
+              f"| {r['engine_s']:.3f} | {r['server_flops']/1e9:.3f} |")
+    print(f"\nticks-per-request ratio (dense/ddim): "
+          f"**{rec['ticks_ratio']:.2f}x** (gate: >=5x); "
+          f"equivalence: {rec['equivalence']}")
+
+
 def masked_step_table(rec):
     print(f"fused masked denoise-tick kernel vs jnp masked chain — "
           f"{rec['slots']} lanes, {rec['image']}x{rec['image']}x1, "
@@ -168,6 +186,10 @@ def main():
     if serve:
         print("\n## §Serving (continuous batching)\n")
         serve_table(serve)
+    ddim = _load_bench("ddim")
+    if ddim:
+        print("\n## §Strided DDIM serving (sampler layer)\n")
+        ddim_table(ddim)
     masked = _load_bench("masked_step")
     if masked:
         print("\n## §Fused masked denoise tick (StepBackend pallas_masked)\n")

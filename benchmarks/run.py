@@ -506,6 +506,134 @@ def bench_masked_step(args):
 
 
 # ---------------------------------------------------------------------------
+# Strided DDIM trajectories through the serving engine + sampler-refactor
+# equivalence gates
+# ---------------------------------------------------------------------------
+def bench_ddim_speedup(args):
+    """Sampler-layer bench: serving cost of strided DDIM trajectories vs
+    the dense DDPM chain through the SAME continuous-batching engine
+    (same slot capacity, same backbone), plus the refactor-safety
+    equivalence of the trajectory machinery.
+
+    Gates (both deterministic — they hold at toy scale too):
+
+    * a DDIM-K request retires in >= 5x fewer server ticks than a dense
+      DDPM request at the same cut-ratio — tick counts, not wall time, so
+      the gate measures the step-budget multiplier, not CPU noise;
+    * the dense-trajectory eta=1 sampler reproduces ``sample_range`` /
+      ``split_sample`` per StepBackend (allclose; the jnp path BITWISE) —
+      i.e. threading trajectories through five layers changed nothing for
+      the dense chain.
+
+    Writes results/BENCH_ddim.json (uploaded by the CI bench-smoke job).
+    """
+    import numpy as np
+
+    from repro.core import collafuse
+    from repro.core.collafuse import CutPlan
+    from repro.diffusion import ddpm
+    from repro.diffusion.sampler import (Sampler, dense_trajectory,
+                                         make_sampler, sample_trajectory)
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.serve import Request, ServeEngine
+
+    T, K = (200, 20) if args.toy else (1000, 50)
+    slots, n_req = (8, 8) if args.toy else (32, 16)
+    cut_ratio = 0.5
+    size = 8
+    shape = (size, size, 1)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    samplers = {"ddpm": make_sampler(T),
+                "ddim": make_sampler(T, "ddim", K, eta=0.0)}
+    eng = ServeEngine(sched, apply_fn, server_params, shape, slots=slots,
+                      samplers=samplers)
+
+    def reqs(name):
+        return [Request(req_id=i, key=jax.random.fold_in(
+                            jax.random.PRNGKey(7), i),
+                        batch=1, cut_ratio=cut_ratio, sampler=name)
+                for i in range(n_req)]
+
+    print(f"# ddim_speedup: {n_req} requests (c={cut_ratio}) on {slots} "
+          f"slots — dense DDPM T={T} vs strided DDIM K={K}, same engine")
+    rows = {}
+    for name in ("ddpm", "ddim"):
+        eng.run(reqs(name))                           # compile + warmup
+        res = eng.run(reqs(name))
+        rows[name] = {"ticks": res.summary["ticks"],
+                      "ticks_per_request": res.summary["ticks"] / n_req,
+                      "engine_s": res.wall_s,
+                      "server_flops": res.summary["server_flops"]}
+    ratio = (rows["ddpm"]["ticks_per_request"] /
+             rows["ddim"]["ticks_per_request"])
+    print("sampler,ticks,ticks_per_request,engine_s")
+    for name, r in rows.items():
+        print(f"{name},{r['ticks']},{r['ticks_per_request']:.2f},"
+              f"{r['engine_s']:.3f}")
+    print(f"server ticks per retired request (dense/ddim): {ratio:.2f}x",
+          flush=True)
+
+    # ---- refactor-safety: dense trajectory == legacy samplers ---------
+    T_eq = 30
+    sched_eq = cosine_schedule(T_eq)
+    plan_eq = CutPlan(T_eq, 0.4)
+    srv_eq = functools.partial(apply_fn, init_fn(jax.random.PRNGKey(3)))
+    cli_eq = functools.partial(apply_fn, init_fn(jax.random.PRNGKey(4)))
+    key = jax.random.PRNGKey(11)
+    x_T = jax.random.normal(key, (4,) + shape, jnp.float32)
+    dense_samplers = [make_sampler(T_eq),                   # ddpm family
+                      Sampler(dense_trajectory(T_eq), "ddim", 1.0)]
+    for backend in ("jnp", "pallas", "pallas_masked"):
+        ref = ddpm.sample_range(sched_eq, srv_eq, key, x_T, T_eq, 1,
+                                backend=backend)
+        s_ref = collafuse.split_sample(sched_eq, plan_eq, srv_eq, cli_eq,
+                                       key, (4,) + shape, backend=backend)
+        for smp in dense_samplers:
+            out = sample_trajectory(sched_eq, smp, srv_eq, key, x_T,
+                                    backend=backend)
+            s_out = collafuse.split_sample(sched_eq, plan_eq, srv_eq,
+                                           cli_eq, key, (4,) + shape,
+                                           backend=backend, sampler=smp)
+            if backend == "jnp":
+                np.testing.assert_array_equal(
+                    np.asarray(out), np.asarray(ref),
+                    err_msg=f"{smp.describe()} not bitwise sample_range")
+                np.testing.assert_array_equal(
+                    np.asarray(s_out), np.asarray(s_ref),
+                    err_msg=f"{smp.describe()} not bitwise split_sample")
+            else:
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{smp.describe()} vs sample_range [{backend}]")
+                np.testing.assert_allclose(
+                    np.asarray(s_out), np.asarray(s_ref), rtol=1e-5,
+                    atol=1e-5,
+                    err_msg=f"{smp.describe()} vs split_sample [{backend}]")
+    print("equivalence: dense eta=1 sampler == sample_range/split_sample "
+          "per backend (jnp bitwise) OK")
+
+    rec = {"scenario": "ddim_speedup", "toy": bool(args.toy),
+           "slots": slots, "n_requests": n_req, "T": T, "K": K,
+           "cut_ratio": cut_ratio, "dense": rows["ddpm"],
+           "ddim": rows["ddim"], "ticks_ratio": ratio,
+           "equivalence": "dense-trajectory eta=1 == sample_range/"
+                          "split_sample per backend; jnp bitwise"}
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_ddim.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out}")
+    # issue gate (deterministic tick counts — enforced at toy scale too)
+    assert ratio >= 5.0, \
+        f"DDIM-{K} only {ratio:.2f}x fewer server ticks per request " \
+        f"than dense T={T}"
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels vs oracle
 # ---------------------------------------------------------------------------
 def bench_kernels(args):
@@ -602,6 +730,7 @@ BENCHES = {
     "energy_split": bench_energy_split,
     "clients_scaling": bench_clients_scaling,
     "serve_continuous": bench_serve_continuous,
+    "ddim_speedup": bench_ddim_speedup,
     "kernels": bench_kernels,
     "masked_step": bench_masked_step,
     "roofline": bench_roofline,

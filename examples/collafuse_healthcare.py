@@ -45,7 +45,11 @@ def build(args):
             channel_mults=(1, 2, 4), attn_resolutions=(8,))
         T, batch = 50, args.batch or 32
     tcfg = TrainerConfig(n_clients=args.clients, T=T,
-                         cut_ratio=args.cut_ratio, lr=1e-3, seed=args.seed)
+                         cut_ratio=args.cut_ratio, lr=1e-3, seed=args.seed,
+                         step_backend=getattr(args, "step_backend", "jnp"),
+                         sampler=getattr(args, "sampler", "ddpm"),
+                         sampler_steps=getattr(args, "num_steps", 0),
+                         eta=getattr(args, "eta", 0.0))
     init_fn = functools.partial(unet.init_params, cfg=ucfg)
     apply_fn = lambda p, x, t: unet.forward(p, x, t, ucfg)
     trainer = CollaFuseTrainer(tcfg, init_fn, apply_fn)
@@ -95,11 +99,24 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-exact 128x128 / T=100 / batch 150")
     ap.add_argument("--log-every", type=int, default=25)
+    ap.add_argument("--step-backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_masked"],
+                    help="StepBackend for evaluation sampling")
+    ap.add_argument("--sampler", default="ddpm", choices=["ddpm", "ddim"],
+                    help="evaluation sampling trajectory (ddim strides the "
+                         "chain to --num-steps model calls)")
+    ap.add_argument("--num-steps", type=int, default=0,
+                    help="DDIM trajectory length K (0 = dense T steps)")
+    ap.add_argument("--eta", type=float, default=0.0,
+                    help="DDIM stochasticity in [0,1]")
     args = ap.parse_args()
 
     trainer, ucfg, clients, holdout, batch = build(args)
     n_params = sum(x.size for x in jax.tree.leaves(trainer.server_params))
     print(f"backbone: {n_params/1e6:.2f}M params | {trainer.plan.describe()}")
+    if trainer.sampler is not None:
+        print(f"sampling: {trainer.sampler.describe()} | "
+              f"backend={trainer.step_backend.name}")
     iters = [image_batches(c, batch, seed=i) for i, c in enumerate(clients)]
 
     t0 = time.time()

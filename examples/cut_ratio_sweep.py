@@ -34,6 +34,13 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--step-backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_masked"])
+    ap.add_argument("--sampler", default="ddpm", choices=["ddpm", "ddim"],
+                    help="evaluation sampling trajectory")
+    ap.add_argument("--num-steps", type=int, default=0,
+                    help="DDIM trajectory length K (0 = dense T steps)")
+    ap.add_argument("--eta", type=float, default=0.0)
     args = ap.parse_args()
 
     rows = []

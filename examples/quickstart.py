@@ -48,6 +48,22 @@ def main():
                                client_idx=0, return_intermediate=True)
     print(f"generated {x0.shape}, finite={bool(jnp.isfinite(x0).all())}")
 
+    # --- the same split on a strided DDIM trajectory ------------------------
+    # 10 model calls instead of T=50: the sampler layer owns WHICH
+    # timesteps the chain visits; the cut maps to the nearest trajectory
+    # point, so server/client still split the work at ~t_split.
+    from repro.core import collafuse
+    from repro.diffusion.sampler import make_sampler
+    ddim = make_sampler(tcfg.T, "ddim", num_steps=10, eta=0.0)
+    server_fn, client_fn = trainer.model_fns(0)
+    x0_fast = collafuse.split_sample(
+        trainer.sched, trainer.plan, server_fn, client_fn, key,
+        (8, ucfg.image_size, ucfg.image_size, 1), sampler=ddim)
+    cut = trainer.plan.cut_index(ddim)
+    print(f"DDIM-10 split ({ddim.describe()}): server {cut} + client "
+          f"{ddim.K - cut} model calls (vs {tcfg.T} dense), "
+          f"finite={bool(jnp.isfinite(x0_fast).all())}")
+
     # --- what does the server actually see at the cut? ----------------------
     fp = privacy.feature_params()
     disclosed = trainer.disclosed(jax.random.PRNGKey(7), clients[0][:16],

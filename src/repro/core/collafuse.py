@@ -23,13 +23,14 @@ independently trainable — this is the observation that makes the split work
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.diffusion import ddpm
 from repro.diffusion.backend import BackendLike
+from repro.diffusion.sampler import Sampler, sample_trajectory
 from repro.diffusion.schedule import DiffusionSchedule
 
 
@@ -72,6 +73,24 @@ class CutPlan:
         return (f"c={self.cut_ratio:.2f}: server denoises t∈({self.t_split},"
                 f"{self.T}] ({self.n_server_steps} steps), client t∈[1,"
                 f"{self.t_split}] ({self.n_client_steps} steps)")
+
+    # --- trajectory view (repro.diffusion.sampler) ---------------------
+    # A strided sampler visits only a subsequence of {T..1}; the cut maps
+    # onto it by NEAREST timestep, so the disclosed tensor is still x at
+    # the cut — the trajectory point closest to t_split — and the step
+    # *counts* (what each side actually pays in model calls) shrink from
+    # (1-c)·T / c·T to the trajectory-relative split.
+    def cut_index(self, sampler: Sampler) -> int:
+        """Trajectory position of the cut: the server executes positions
+        [0, cut_index), the client [cut_index, K)."""
+        assert sampler.trajectory.T == self.T, (sampler.trajectory.T, self.T)
+        return sampler.trajectory.cut_pos(self.t_split)
+
+    def traj_server_steps(self, sampler: Sampler) -> int:
+        return self.cut_index(sampler)
+
+    def traj_client_steps(self, sampler: Sampler) -> int:
+        return sampler.K - self.cut_index(sampler)
 
 
 # ---------------------------------------------------------------------------
@@ -136,34 +155,62 @@ def make_pooled_server_batch(sched: DiffusionSchedule, plan: CutPlan,
 # ---------------------------------------------------------------------------
 # Split inference (sampling)
 # ---------------------------------------------------------------------------
+def _server_segment(sched, plan, sampler, server_fn, key, x,
+                    backend: BackendLike):
+    """Server prefix: dense t = T … t_split+1, or trajectory positions
+    [0, cut_index) under a sampler.  ``sampler=None`` keeps the original
+    ``sample_range`` path (bitwise-stable legacy behaviour)."""
+    if sampler is None:
+        if plan.n_server_steps == 0:
+            return x
+        return ddpm.sample_range(sched, server_fn, key, x, plan.T,
+                                 plan.t_split + 1, backend=backend)
+    cut = plan.cut_index(sampler)
+    return sample_trajectory(sched, sampler, server_fn, key, x, 0, cut,
+                             backend=backend)
+
+
+def _client_segment(sched, plan, sampler, client_fn, key, x,
+                    backend: BackendLike):
+    """Client suffix: dense t = t_split … 1, or positions [cut_index, K)."""
+    if sampler is None:
+        if plan.n_client_steps == 0:
+            return x
+        return ddpm.sample_range(sched, client_fn, key, x, plan.t_split, 1,
+                                 backend=backend)
+    cut = plan.cut_index(sampler)
+    return sample_trajectory(sched, sampler, client_fn, key, x, cut,
+                             sampler.K, backend=backend)
+
+
 def split_sample(sched: DiffusionSchedule, plan: CutPlan,
                  server_fn: Callable, client_fn: Callable, key, shape,
                  return_intermediate: bool = False,
-                 backend: BackendLike = None):
+                 backend: BackendLike = None,
+                 sampler: Optional[Sampler] = None):
     """Full CollaFuse generation.
 
     1. client draws x_T ~ N(0, I);
-    2. server denoises t = T … t_split+1 with the shared backbone;
-    3. x_{t_split} crosses back to the client (the DISCLOSED tensor);
-    4. client finishes t = t_split … 1 with its private model.
+    2. server denoises the noisy prefix with the shared backbone;
+    3. x at the cut crosses back to the client (the DISCLOSED tensor);
+    4. client finishes the low-noise suffix with its private model.
 
     ``backend`` selects the step backend for both segments (see
-    ``repro.diffusion.backend``).  Returns x_0 (and x_{t_split} if
-    ``return_intermediate``).
+    ``repro.diffusion.backend``).  ``sampler`` selects the timestep
+    TRAJECTORY and update family (``repro.diffusion.sampler``): None keeps
+    the dense DDPM chain (t = T…t_split+1 server, t_split…1 client —
+    bitwise the pre-sampler behaviour); a strided DDIM sampler walks its
+    K-step subsequence split at ``plan.cut_index(sampler)``, so the whole
+    generation costs K model calls instead of T while the disclosed tensor
+    stays x at (the trajectory point nearest) the cut.  Returns x_0 (and
+    the disclosed tensor if ``return_intermediate``).
     """
     k_init, k_srv, k_cli = jax.random.split(key, 3)
     x_t = jax.random.normal(k_init, shape, jnp.float32)
-    if plan.n_server_steps > 0:
-        x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t,
-                                  plan.T, plan.t_split + 1,
-                                  backend=backend)
-    else:
-        x_mid = x_t
-    if plan.n_client_steps > 0:
-        x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid,
-                               plan.t_split, 1, backend=backend)
-    else:
-        x0 = x_mid
+    x_mid = _server_segment(sched, plan, sampler, server_fn, k_srv, x_t,
+                            backend)
+    x0 = _client_segment(sched, plan, sampler, client_fn, k_cli, x_mid,
+                         backend)
     if return_intermediate:
         return x0, x_mid
     return x0
@@ -188,28 +235,22 @@ def lane_keys(req_key, batch: int):
 def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
                       server_fn: Callable, client_fn: Callable, lane_key,
                       shape, return_intermediate: bool = False,
-                      backend: BackendLike = None):
+                      backend: BackendLike = None,
+                      sampler: Optional[Sampler] = None):
     """Single-image reference for one engine lane: the exact computation the
     continuous-batching engine must reproduce for image i of a request when
     handed ``lane_keys(req_key, batch)[·][i]``'s parent ``fold_in`` key.
 
-    Identical structure to :func:`split_sample` at batch 1, built on
-    :func:`ddpm.sample_range` — the serving tests compare engine slots
-    against this, lane by lane.
+    Identical structure to :func:`split_sample` at batch 1 (same
+    ``sampler`` semantics) — the serving tests compare engine slots against
+    this, lane by lane.
     """
     k_init, k_srv, k_cli = jax.random.split(lane_key, 3)
     x_t = jax.random.normal(k_init, shape, jnp.float32)
-    if plan.n_server_steps > 0:
-        x_mid = ddpm.sample_range(sched, server_fn, k_srv, x_t[None],
-                                  plan.T, plan.t_split + 1,
-                                  backend=backend)[0]
-    else:
-        x_mid = x_t
-    if plan.n_client_steps > 0:
-        x0 = ddpm.sample_range(sched, client_fn, k_cli, x_mid[None],
-                               plan.t_split, 1, backend=backend)[0]
-    else:
-        x0 = x_mid
+    x_mid = _server_segment(sched, plan, sampler, server_fn, k_srv,
+                            x_t[None], backend)[0]
+    x0 = _client_segment(sched, plan, sampler, client_fn, k_cli,
+                         x_mid[None], backend)[0]
     if return_intermediate:
         return x0, x_mid
     return x0
@@ -217,32 +258,32 @@ def split_sample_lane(sched: DiffusionSchedule, plan: CutPlan,
 
 def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
                        server_fn: Callable, key, x0_client,
-                       backend: BackendLike = None):
+                       backend: BackendLike = None,
+                       sampler: Optional[Sampler] = None):
     """What the server *could* reconstruct of a real client image: noise the
-    client's x_0 to x_T, denoise on the server down to t_split (paper Fig. 1
-    columns).  Used by the disclosure benchmarks."""
+    client's x_0 to x_T, denoise on the server down to the cut (paper
+    Fig. 1 columns) — under a strided ``sampler``, down to the trajectory
+    point nearest t_split.  Used by the disclosure benchmarks."""
     k_n, k_s = jax.random.split(key)
     b = x0_client.shape[0]
     t_top = jnp.full((b,), sched.T, jnp.int32)
     eps = jax.random.normal(k_n, x0_client.shape, x0_client.dtype)
     x_T = ddpm.q_sample(sched, x0_client, t_top, eps)
-    if plan.n_server_steps == 0:
-        return x_T
-    return ddpm.sample_range(sched, server_fn, k_s, x_T,
-                             plan.T, plan.t_split + 1, backend=backend)
+    return _server_segment(sched, plan, sampler, server_fn, k_s, x_T,
+                           backend)
 
 
 # ---------------------------------------------------------------------------
 # Compute split accounting (paper H2c — GPU energy proxy)
 # ---------------------------------------------------------------------------
-def flops_split(plan: CutPlan, flops_per_model_call: float,
-                batch: int) -> dict:
-    """Denoising FLOPs executed per side for one generated batch, plus the
-    client's (cheap) diffusion pass.  The paper measures GPU energy with
-    codecarbon; on TPU/CPU we report the deterministic FLOP split (DESIGN.md
-    §3.2) — the monotone-in-c claim (H2c) is preserved exactly."""
-    server = plan.n_server_steps * flops_per_model_call * batch
-    client = plan.n_client_steps * flops_per_model_call * batch
+def flops_split_steps(n_server_steps: int, n_client_steps: int,
+                      flops_per_model_call: float, batch: int) -> dict:
+    """FLOP split from raw per-side step counts — the shared core of
+    :func:`flops_split` and the trajectory-aware serving accounting (a
+    strided sampler pays ``CutPlan.traj_*_steps`` model calls, not the
+    dense (1-c)·T / c·T)."""
+    server = n_server_steps * flops_per_model_call * batch
+    client = n_client_steps * flops_per_model_call * batch
     diffusion_pass = 10.0 * batch  # q_sample: a handful of elementwise ops
     return {
         "server_flops": server,
@@ -250,3 +291,13 @@ def flops_split(plan: CutPlan, flops_per_model_call: float,
         "client_fraction": (client + diffusion_pass) /
                            max(server + client + diffusion_pass, 1.0),
     }
+
+
+def flops_split(plan: CutPlan, flops_per_model_call: float,
+                batch: int) -> dict:
+    """Denoising FLOPs executed per side for one generated batch, plus the
+    client's (cheap) diffusion pass.  The paper measures GPU energy with
+    codecarbon; on TPU/CPU we report the deterministic FLOP split (DESIGN.md
+    §3.2) — the monotone-in-c claim (H2c) is preserved exactly."""
+    return flops_split_steps(plan.n_server_steps, plan.n_client_steps,
+                             flops_per_model_call, batch)

@@ -24,6 +24,17 @@ the identical f32 expression, modulo rsqrt-vs-divide rounding ~1e-7), and
 ``masked_step`` with ``active=ones`` is bitwise ``step`` for every backend.
 Inactive lanes always pass through bit-unchanged, even at out-of-range t.
 
+Two step contracts per backend:
+
+* timestep-indexed (``step`` / ``masked_step``): the dense DDPM chain,
+  per-sample t in {1..T} — the original seam.
+* trajectory-indexed (``index_step`` / ``masked_index_step``): per-sample
+  COLUMNS into a canonical (4, C) coefficient table (c_eps, ar, sigma,
+  keep) built by ``repro.diffusion.sampler`` — one column per trajectory
+  position, so strided DDIM and dense DDPM ticks are the same program.
+  The dense ancestral table makes ``index_step`` bitwise ``step`` on the
+  jnp backend.
+
 The Pallas backends honour ``REPRO_PALLAS_INTERPRET`` (see ``kernels/ops``):
 interpret mode on CPU, compiled Mosaic on TPU.
 """
@@ -57,6 +68,35 @@ class StepBackend:
         del tables                       # only the fused backend stages them
         t_safe = jnp.clip(t, 1, sched.T)
         x_new = self.step(sched, x, t_safe, eps_hat, noise, clip=clip)
+        m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
+        return jnp.where(m, x_new, x)
+
+    # -- trajectory-indexed steps (repro.diffusion.sampler) ---------------
+    # ``tables`` is a canonical (4, C) coefficient table (c_eps, ar, sigma,
+    # keep) — one column per trajectory position (possibly several
+    # trajectories concatenated; the serving engine does this).  ``cols``
+    # is the per-sample column.  The base implementation is the pure-jnp
+    # reference: for dense ancestral tables it reproduces ``ddpm.p_sample``
+    # + clip bit-for-bit (same gathered values, same expression tree).
+    def index_step(self, x, cols, eps_hat, noise, tables, *,
+                   clip: float = 3.0):
+        def row(r):
+            v = tables[r, cols]
+            return v.reshape(v.shape + (1,) * (x.ndim - v.ndim))
+        mean = (x - row(0) * eps_hat) / jnp.sqrt(row(1))
+        x_new = mean + row(3) * row(2) * noise
+        if clip:
+            x_new = jnp.clip(x_new, -clip, clip)
+        return x_new
+
+    def masked_index_step(self, x, cols, eps_hat, noise, active, tables, *,
+                          clip: float = 3.0):
+        """Masked trajectory tick: active lanes execute their column's
+        step, inactive lanes pass through bit-unchanged (cols clamped
+        in-range first, so retired/empty lanes may carry junk)."""
+        cols_safe = jnp.clip(cols, 0, tables.shape[1] - 1)
+        x_new = self.index_step(x, cols_safe, eps_hat, noise, tables,
+                                clip=clip)
         m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
         return jnp.where(m, x_new, x)
 
@@ -116,6 +156,14 @@ class PallasStepBackend(StepBackend):
             x = jnp.clip(x, -clip, clip)
         return x
 
+    def index_step(self, x, cols, eps_hat, noise, tables, *,
+                   clip: float = 3.0):
+        from repro.kernels import ops as kops
+        x = kops.ddpm_index_step(x, cols, eps_hat, noise, tables)
+        if clip:
+            x = jnp.clip(x, -clip, clip)
+        return x
+
 
 @register
 class PallasMaskedStepBackend(StepBackend):
@@ -135,3 +183,15 @@ class PallasMaskedStepBackend(StepBackend):
         from repro.kernels import ops as kops
         return kops.ddpm_masked_step(sched, x, t, eps_hat, noise, active,
                                      clip=clip, tables=tables)
+
+    def index_step(self, x, cols, eps_hat, noise, tables, *,
+                   clip: float = 3.0):
+        ones = jnp.ones((x.shape[0],), bool)
+        return self.masked_index_step(x, cols, eps_hat, noise, ones, tables,
+                                      clip=clip)
+
+    def masked_index_step(self, x, cols, eps_hat, noise, active, tables, *,
+                          clip: float = 3.0):
+        from repro.kernels import ops as kops
+        return kops.traj_masked_step(x, cols, eps_hat, noise, active, tables,
+                                     clip=clip)

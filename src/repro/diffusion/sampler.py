@@ -1,0 +1,241 @@
+"""Sampler layer: who decides WHICH timesteps a reverse chain visits.
+
+The repo's step contract used to be implicit: every consumer —
+``ddpm.sample_range``, the CollaFuse split samplers, the serving engine —
+walked the dense chain t = T, T-1, ..., 1, one model call per schedule
+step.  That hardcodes the compute cost of a request at T model calls, which
+is exactly what CollaFuse's resource-constrained clients cannot afford.
+
+This module makes the *trajectory* — the ordered timestep subsequence the
+chain actually visits — a first-class object, and pairs it with an update
+*family*:
+
+* :class:`Trajectory` — a strictly decreasing tuple of timesteps starting
+  at T; ``dense_trajectory(T)`` is the classic {T..1} chain,
+  ``strided_trajectory(T, K)`` a K-step DDIM-style subsequence.  Positions
+  index *steps*: executing position j moves x from ``t_at(j)`` to
+  ``t_at(j+1)`` (``t_at(K) == 0`` — clean data).
+* :class:`Sampler` — a trajectory plus the per-step update family:
+  ``"ddpm"`` (ancestral; dense only) or ``"ddim"`` with ``eta ∈ [0, 1]``
+  (valid on any trajectory; eta = 1 on the dense trajectory IS the
+  ancestral step — see :func:`repro.diffusion.schedule.ddim_pair_coefs`).
+  ``tables(sched)`` emits the canonical (4, K) coefficient table
+  (c_eps, ar, sigma, keep) consumed by every
+  :class:`~repro.diffusion.backend.StepBackend` — the jnp reference
+  gathers rows, the fused Pallas tick gathers columns from SMEM — so a
+  strided DDIM tick runs in the SAME single kernel as the dense DDPM one.
+* :func:`sample_trajectory` — the trajectory-indexed generalisation of
+  ``ddpm.sample_range``: runs positions [pos_from, pos_to) with
+  ``sample_range``'s exact key discipline.  With the default sampler
+  (dense DDPM) on the jnp backend it reproduces ``sample_range``
+  bit-for-bit (gated in ``benchmarks.run --only ddim_speedup``).
+
+The CollaFuse cut maps onto a trajectory by nearest timestep
+(:meth:`Trajectory.cut_pos`): the disclosed tensor is still x at the cut —
+the trajectory point closest to t_split — so the paper's disclosure
+semantics survive striding unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diffusion.backend import BackendLike, get_backend
+from repro.diffusion.schedule import (DiffusionSchedule, ancestral_pair_coefs,
+                                      ddim_pair_coefs)
+
+FAMILIES = ("ddpm", "ddim")
+
+
+@dataclasses.dataclass(frozen=True)
+class Trajectory:
+    """An ordered timestep subsequence t_0 > t_1 > ... > t_{K-1} of {1..T}.
+
+    ``timesteps[0] == T`` (generation starts from pure noise x_T) and every
+    trajectory implicitly ends at 0 (clean data): the step at position j
+    moves ``t_at(j) -> t_at(j+1)`` and ``t_at(K) == 0``, so the final
+    executed step always targets ᾱ = 1.  Stored as a tuple of Python ints —
+    hashable, host-side, static under jit.
+    """
+
+    timesteps: Tuple[int, ...]
+    T: int
+
+    def __post_init__(self):
+        ts = self.timesteps
+        assert len(ts) >= 1, "empty trajectory"
+        assert ts[0] == self.T, \
+            f"trajectory must start at T={self.T}, got {ts[0]}"
+        assert all(a > b for a, b in zip(ts, ts[1:])), \
+            "trajectory timesteps must be strictly decreasing"
+        assert ts[-1] >= 1, f"trajectory must stay in {{1..T}}, got {ts[-1]}"
+
+    @property
+    def K(self) -> int:
+        """Number of steps (model calls) a full walk costs."""
+        return len(self.timesteps)
+
+    @property
+    def is_dense(self) -> bool:
+        return self.timesteps == tuple(range(self.T, 0, -1))
+
+    def t_at(self, pos: int) -> int:
+        """Timestep x occupies BEFORE executing position pos (0 at pos=K)."""
+        return self.timesteps[pos] if pos < self.K else 0
+
+    def t_prev(self) -> Tuple[int, ...]:
+        """Target timestep of each position: (t_1, ..., t_{K-1}, 0)."""
+        return self.timesteps[1:] + (0,)
+
+    def cut_pos(self, t_split: int) -> int:
+        """Map the CollaFuse cut onto this trajectory: the position whose
+        occupied timestep is NEAREST t_split — the server executes positions
+        [0, cut_pos), leaving x at ``t_at(cut_pos)`` (the disclosed tensor).
+        Dense trajectories recover the exact split (cut_pos = T - t_split);
+        midpoint ties break toward FEWER server steps (the disclosed tensor
+        stays noisier — privacy- and server-budget-conservative).
+        """
+        dist = [abs(self.t_at(j) - t_split) for j in range(self.K + 1)]
+        return int(np.argmin(dist))
+
+    def describe(self) -> str:
+        ts = self.timesteps
+        inner = (",".join(map(str, ts)) if self.K <= 6 else
+                 f"{ts[0]},{ts[1]},...,{ts[-2]},{ts[-1]}")
+        return f"[{inner}] ({self.K} steps over T={self.T})"
+
+
+def dense_trajectory(T: int) -> Trajectory:
+    """The classic DDPM chain T, T-1, ..., 1."""
+    return Trajectory(tuple(range(T, 0, -1)), T)
+
+
+def strided_trajectory(T: int, num_steps: int) -> Trajectory:
+    """A K-step DDIM-style subsequence: K timesteps spread evenly over
+    {1..T}, endpoints included (T first so generation starts at pure noise,
+    1 last so the final pair targets ᾱ(0) = 1)."""
+    assert 1 <= num_steps <= T, (num_steps, T)
+    if num_steps == 1:
+        return Trajectory((T,), T)       # single x0-prediction step T -> 0
+    ts = np.unique(np.round(np.linspace(1, T, num_steps)).astype(int))
+    return Trajectory(tuple(int(t) for t in ts[::-1]), T)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """A trajectory + the per-step update family walking it.
+
+    ``family="ddpm"`` is the ancestral update — only defined on the dense
+    trajectory (its posterior conditions on the t -> t-1 pair).
+    ``family="ddim"`` accepts any trajectory; ``eta`` scales the per-step
+    noise from deterministic (0) to ancestral-variance (1).  ``eta=1`` on
+    the dense trajectory is routed through the ancestral coefficients (the
+    two are a closed-form identity; sharing the code path makes the
+    equivalence bitwise).
+    """
+
+    trajectory: Trajectory
+    family: str = "ddpm"
+    eta: float = 1.0
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert 0.0 <= self.eta <= 1.0, self.eta
+        if self.family == "ddpm":
+            assert self.trajectory.is_dense, \
+                "the DDPM ancestral update is only defined on the dense " \
+                "trajectory; use family='ddim' for strided chains"
+
+    @property
+    def K(self) -> int:
+        return self.trajectory.K
+
+    def tables(self, sched: DiffusionSchedule) -> jnp.ndarray:
+        """(4, K) canonical coefficient table (c_eps, ar, sigma, keep);
+        column j holds the step executed at trajectory position j."""
+        assert sched.T == self.trajectory.T, (sched.T, self.trajectory.T)
+        t = jnp.asarray(self.trajectory.timesteps, jnp.int32)
+        ancestral = self.family == "ddpm" or (self.eta == 1.0 and
+                                              self.trajectory.is_dense)
+        if ancestral:
+            return ancestral_pair_coefs(sched, t)
+        tp = jnp.asarray(self.trajectory.t_prev(), jnp.int32)
+        return ddim_pair_coefs(sched, t, tp, self.eta)
+
+    def describe(self) -> str:
+        fam = (self.family if self.family == "ddpm"
+               else f"ddim(eta={self.eta:g})")
+        return f"{fam} over {self.trajectory.describe()}"
+
+
+def make_sampler(T: int, family: str = "ddpm", num_steps: int = 0,
+                 eta: float = 1.0) -> Sampler:
+    """Build a sampler from launcher-flag-shaped inputs.  ``num_steps`` of
+    0 (or T) selects the dense trajectory; ddpm defaults eta to 1 (it IS
+    the eta=1 member of the family)."""
+    k = num_steps if num_steps else T
+    if family == "ddpm" and k < T:
+        raise ValueError(
+            f"the DDPM ancestral update only walks the dense chain; "
+            f"num_steps={num_steps} < T={T} needs family='ddim' "
+            f"(--sampler ddim on the launchers)")
+    traj = dense_trajectory(T) if k >= T else strided_trajectory(T, k)
+    if family == "ddpm":
+        return Sampler(traj, "ddpm", 1.0)
+    return Sampler(traj, family, eta)
+
+
+DEFAULT = "ddpm"                 # registry key engines use for Request.sampler
+
+
+def default_samplers(T: int):
+    """The serving engine's default sampler menu: just the dense chain."""
+    return {DEFAULT: make_sampler(T)}
+
+
+# ---------------------------------------------------------------------------
+# trajectory-indexed sampling loop (generalises ddpm.sample_range)
+# ---------------------------------------------------------------------------
+def sample_trajectory(sched: DiffusionSchedule, sampler: Sampler,
+                      model_fn, key, x_start, pos_from: int = 0,
+                      pos_to: Optional[int] = None,
+                      backend: BackendLike = None, clip: float = 3.0):
+    """Run trajectory positions [pos_from, pos_to) on ``x_start``.
+
+    Full generation: pos_from=0, pos_to=K (x_T -> x_0).
+    CollaFuse server segment: positions [0, cut_pos); client segment
+    [cut_pos, K) — see :meth:`Trajectory.cut_pos`.
+
+    Key discipline is ``ddpm.sample_range``'s exactly (each step splits the
+    carried key and draws the step noise from the second half), so on the
+    dense DDPM sampler this function reproduces ``sample_range`` —
+    bit-for-bit on the jnp backend, to kernel rounding on the Pallas ones —
+    and engine lanes remain replayable per image.
+    """
+    K = sampler.K
+    pos_to = K if pos_to is None else pos_to
+    assert 0 <= pos_from <= K and 0 <= pos_to <= K, (pos_from, pos_to, K)
+    if pos_from >= pos_to:
+        return x_start
+    b = x_start.shape[0]
+    backend = get_backend(backend)
+    tables = sampler.tables(sched)
+    traj_t = jnp.asarray(sampler.trajectory.timesteps, jnp.int32)
+
+    def body(i, carry):
+        x, k = carry
+        pos = pos_from + i
+        k, k_n = jax.random.split(k)
+        tb = jnp.full((b,), traj_t[pos], jnp.int32)
+        eps_hat = model_fn(x, tb)
+        noise = jax.random.normal(k_n, x.shape, x.dtype)
+        cols = jnp.full((b,), pos, jnp.int32)
+        x = backend.index_step(x, cols, eps_hat, noise, tables, clip=clip)
+        return (x, k)
+
+    x, _ = jax.lax.fori_loop(0, pos_to - pos_from, body, (x_start, key))
+    return x

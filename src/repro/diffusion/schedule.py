@@ -80,3 +80,68 @@ def get_schedule(name: str, T: int) -> DiffusionSchedule:
     if name == "linear":
         return linear_schedule(T)
     raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Generalized (t, t_prev) step-pair coefficients
+#
+# The dense DDPM chain only ever steps t -> t-1, so the precomputed arrays
+# above suffice.  Strided trajectories (repro.diffusion.sampler) step
+# arbitrary pairs t -> t_prev with t > t_prev >= 0; every update family in
+# this repo reduces to ONE canonical per-pair form
+#
+#     x_prev = (x_t - c_eps * eps_hat) / sqrt(ar) + keep * sigma * z
+#
+# with rows (c_eps, ar, sigma, keep):  ar = alpha_bar(t)/alpha_bar(t_prev)
+# is the "effective alpha" of the pair (== alphas[t-1] for the dense pair),
+# c_eps the eps_hat scale, sigma the per-step noise scale, and keep in
+# {0, 1} masking the noise draw wherever sigma == 0 (so callers may pass
+# junk noise at deterministic steps, matching ``ddpm.p_sample``'s t == 1
+# contract).
+# ---------------------------------------------------------------------------
+def alpha_bar_at(sched: DiffusionSchedule, t) -> jnp.ndarray:
+    """alpha_bar extended to t ∈ {0..T}: ᾱ(0) = 1 (the clean-data endpoint
+    every trajectory's final step targets), ᾱ(t) = alpha_bar[t-1] else."""
+    t = jnp.asarray(t)
+    return jnp.where(t >= 1, sched.alpha_bar[jnp.clip(t, 1, None) - 1], 1.0)
+
+
+def ancestral_pair_coefs(sched: DiffusionSchedule, t) -> jnp.ndarray:
+    """DDPM ancestral coefficients for the dense pair (t, t-1) in canonical
+    (4, ...) row order (c_eps, ar, sigma, keep).
+
+    Built from the SAME precomputed arrays ``ddpm.p_sample`` reads (betas /
+    sqrt_one_minus_alpha_bar, alphas, sqrt(posterior_var)), so a sampler
+    stepping the dense trajectory through these coefficients reproduces
+    ``p_sample`` bit-for-bit on the jnp backend.
+    """
+    ti = jnp.asarray(t) - 1
+    c_eps = sched.betas[ti] / sched.sqrt_one_minus_alpha_bar[ti]
+    ar = sched.alphas[ti]
+    sigma = jnp.sqrt(sched.posterior_var[ti])
+    keep = (jnp.asarray(t) > 1).astype(jnp.float32)
+    return jnp.stack([c_eps, ar, sigma, keep])
+
+
+def ddim_pair_coefs(sched: DiffusionSchedule, t, t_prev,
+                    eta: float = 0.0) -> jnp.ndarray:
+    """DDIM (Song et al. 2021, eq. 12) coefficients for ARBITRARY step
+    pairs t -> t_prev (t > t_prev >= 0), canonical (4, ...) rows.
+
+    eta interpolates determinism: eta = 0 is the deterministic DDIM update;
+    eta = 1 on the dense pair (t, t-1) is EXACTLY the DDPM ancestral step —
+    sigma^2 collapses to the posterior variance and (c_eps, ar) to the
+    ancestral coefficients (closed-form identity, property-tested in
+    tests/test_properties.py; :class:`~repro.diffusion.sampler.Sampler`
+    routes that case through :func:`ancestral_pair_coefs` so the identity
+    holds bitwise, not just to rounding).
+    """
+    ab_t = alpha_bar_at(sched, t)
+    ab_p = alpha_bar_at(sched, t_prev)
+    sig2 = (eta ** 2) * (1.0 - ab_p) / (1.0 - ab_t) * (1.0 - ab_t / ab_p)
+    sigma = jnp.sqrt(sig2)
+    ar = ab_t / ab_p
+    c_eps = (jnp.sqrt(1.0 - ab_t) -
+             jnp.sqrt(ar) * jnp.sqrt(jnp.clip(1.0 - ab_p - sig2, 0.0, None)))
+    keep = (sigma > 0).astype(jnp.float32)
+    return jnp.stack([c_eps, ar, sigma, keep])

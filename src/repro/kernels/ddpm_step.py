@@ -6,12 +6,19 @@ round-trips of the image tensor; :func:`ddpm_step` fuses it into one read of
 (x_t, ε̂, z) + one write, with the per-sample scalar coefficients staged in
 SMEM.
 
-:func:`ddpm_masked_step` is the serving engine's whole tick as ONE program:
-per-lane schedule-coefficient gather from an SMEM (3, T) table by (clamped)
-per-lane t, the update, the reference sampler's post-step clip, and the
+:func:`traj_masked_step` is the serving engine's whole tick as ONE program:
+per-lane coefficient gather from an SMEM (4, C) table by (clamped) per-lane
+COLUMN, the update, the reference sampler's post-step clip, and the
 active-lane select — collapsing the jnp chain gather→step→clip→where (≈4+
 HBM round-trips of the slot array) into a single read of (x, ε̂, z) + one
-write.  Inactive lanes pass through bit-unchanged, including out-of-range t.
+write.  Inactive lanes pass through bit-unchanged, including out-of-range
+columns.  Columns index TRAJECTORY positions (``repro.diffusion.sampler``):
+the table's rows are the canonical (c_eps, ar, sigma, keep) pair
+coefficients, so a strided DDIM tick and the dense DDPM tick are the SAME
+kernel — several trajectories concatenate column-wise into one table and
+heterogeneous lanes just gather different columns.  :func:`ddpm_masked_step`
+keeps the timestep-indexed API as a thin wrapper (col = T - t over the
+dense ancestral table).
 
 Grid: (batch, pixel_blocks); block = (1, 512·8) lanes — pure VPU work, no MXU.
 """
@@ -23,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.diffusion.schedule import ancestral_pair_coefs
 
 
 def _step_kernel(x_ref, eps_ref, noise_ref, coef_ref, o_ref):
@@ -88,40 +97,48 @@ def ddpm_step(x_t, eps_hat, noise, coefs, *, block: int = 4096,
 # fused masked tick: gather + step + clip + active-select in one program
 # ---------------------------------------------------------------------------
 def masked_step_tables(sched) -> jnp.ndarray:
-    """(3, T) f32 schedule table the masked kernel gathers from SMEM.
-
-    Row r, column t-1 holds the step-t coefficient: r=0 ε̂-scale β/√(1−ᾱ),
-    r=1 1/√α, r=2 posterior σ.  Long-lived callers (the serving engine)
-    build this ONCE per schedule and pass it to every tick, hoisting the
-    per-step coefficient recompute out of the hot loop entirely.
+    """(4, T) canonical coefficient table for the DENSE ancestral chain,
+    column j holding the trajectory-position-j step (timestep t = T - j):
+    rows (c_eps, ar, sigma, keep) — see ``repro.diffusion.schedule``.
+    Long-lived callers (the serving engine) build their table(s) ONCE and
+    pass them to every tick, hoisting the per-step coefficient recompute
+    out of the hot loop entirely.  Strided trajectories build theirs via
+    ``repro.diffusion.sampler.Sampler.tables`` — same layout, same kernel.
     """
-    return jnp.stack([sched.betas / sched.sqrt_one_minus_alpha_bar,
-                      jax.lax.rsqrt(sched.alphas),
-                      jnp.sqrt(sched.posterior_var)])
+    t = jnp.arange(sched.T, 0, -1, dtype=jnp.int32)
+    return ancestral_pair_coefs(sched, t)
 
 
-def masked_step_bytes(x, T: int, *, block: int = 4096) -> int:
+def index_step_coefs(tables, cols) -> jnp.ndarray:
+    """Gather per-sample kernel coefficients (c_eps, 1/√ar, sigma, keep)
+    from a canonical (4, C) table — the (B, 4) format :func:`ddpm_step`
+    streams from SMEM."""
+    g = tables[:, cols]
+    return jnp.stack([g[0], jax.lax.rsqrt(g[1]), g[2], g[3]], axis=-1)
+
+
+def masked_step_bytes(x, C: int, *, block: int = 4096) -> int:
     """HBM bytes the fused masked kernel advertises to XLA (its
     ``pl.CostEstimate``): one read of (x, ε̂, z) + one write of the output
     — accounting the block padding the kernel actually streams — plus the
-    SMEM-staged (3, T) table and per-lane (S, 3) meta ints."""
+    SMEM-staged (4, C) table and per-lane (S, 2) meta ints."""
     s = x.shape[0]
     d = x.size // s
     blk = min(block, d)
     dp = d + ((-d) % blk)
-    return 4 * s * dp * x.dtype.itemsize + 3 * T * 4 + s * 3 * 4
+    return 4 * s * dp * x.dtype.itemsize + 4 * C * 4 + s * 2 * 4
 
 
 def _masked_step_kernel(meta_ref, tab_ref, x_ref, eps_ref, noise_ref, o_ref,
                         *, clip):
-    """meta: (1, 3) i32 = (t_safe - 1, keep_noise, active) in SMEM;
-    tab: (3, T) f32 in SMEM; x/eps/noise/o: (1, blk) VMEM blocks."""
-    ti = meta_ref[0, 0]
-    keep = meta_ref[0, 1].astype(jnp.float32)
-    act = meta_ref[0, 2]
-    c_eps = tab_ref[0, ti]
-    inv_sa = tab_ref[1, ti]
-    sigma = tab_ref[2, ti]
+    """meta: (1, 2) i32 = (col_safe, active) in SMEM; tab: (4, C) f32 in
+    SMEM (rows c_eps, ar, sigma, keep); x/eps/noise/o: (1, blk) VMEM."""
+    col = meta_ref[0, 0]
+    act = meta_ref[0, 1]
+    c_eps = tab_ref[0, col]
+    inv_sa = jax.lax.rsqrt(tab_ref[1, col])
+    sigma = tab_ref[2, col]
+    keep = tab_ref[3, col]
     x_in = x_ref[...]
     x = x_in.astype(jnp.float32)
     eps = eps_ref[...].astype(jnp.float32)
@@ -134,23 +151,23 @@ def _masked_step_kernel(meta_ref, tab_ref, x_ref, eps_ref, noise_ref, o_ref,
     o_ref[...] = jnp.where(act > 0, new.astype(o_ref.dtype), x_in)
 
 
-def ddpm_masked_step(x, t, eps_hat, noise, active, tables, *,
+def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
                      clip: float = 3.0, block: int = 4096,
                      interpret: bool = True):
-    """Fused masked denoise tick over a slot array.
+    """Fused masked trajectory tick over a slot array.
 
-    x/eps_hat/noise: (S, ...); t: (S,) int32 (ANY value — clamped into
-    {1..T} so idle lanes gather in-range entries); active: (S,) bool;
-    tables: ``masked_step_tables(sched)``.  Per lane: where active,
-    x <- clip(p_sample(x, t_safe), ±clip); otherwise x passes through
-    bit-unchanged.  At t_safe == 1 the noise term is dropped (keep flag),
-    matching ``ddpm.p_sample``'s deterministic last step.
+    x/eps_hat/noise: (S, ...); cols: (S,) int32 per-lane table column (ANY
+    value — clamped into [0, C) so idle lanes gather in-range entries);
+    active: (S,) bool; tables: canonical (4, C) coefficient table.  Per
+    lane: where active, x <- clip(step(x, cols), ±clip); otherwise x passes
+    through bit-unchanged.  Where the column's keep flag is 0 (σ == 0 —
+    e.g. the final trajectory step) the noise term is dropped, matching
+    ``ddpm.p_sample``'s deterministic last step.
     """
     s = x.shape[0]
-    T = tables.shape[1]
-    t_safe = jnp.clip(t, 1, T)
-    meta = jnp.stack([t_safe - 1, (t_safe > 1).astype(jnp.int32),
-                      active.astype(jnp.int32)], axis=-1)
+    C = tables.shape[1]
+    col_safe = jnp.clip(cols, 0, C - 1)
+    meta = jnp.stack([col_safe, active.astype(jnp.int32)], axis=-1)
     flat = x.reshape(s, -1)
     d = flat.shape[1]
     blk = min(block, d)
@@ -166,9 +183,9 @@ def ddpm_masked_step(x, t, eps_hat, noise, active, tables, *,
         functools.partial(_masked_step_kernel, clip=float(clip)),
         grid=(s, dp // blk),
         in_specs=[
-            pl.BlockSpec((1, 3), lambda ib, ic: (ib, 0),
+            pl.BlockSpec((1, 2), lambda ib, ic: (ib, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((3, T), lambda ib, ic: (0, 0),
+            pl.BlockSpec((4, C), lambda ib, ic: (0, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
             pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
@@ -178,9 +195,23 @@ def ddpm_masked_step(x, t, eps_hat, noise, active, tables, *,
         out_shape=jax.ShapeDtypeStruct((s, dp), x.dtype),
         cost_estimate=pl.CostEstimate(
             flops=7 * s * dp, transcendentals=0,
-            bytes_accessed=masked_step_bytes(x, T, block=block)),
+            bytes_accessed=masked_step_bytes(x, C, block=block)),
         interpret=interpret,
     )(meta, tables, flat, eps2, z2)
     if pad:
         out = out[:, :d]
     return out.reshape(x.shape)
+
+
+def ddpm_masked_step(x, t, eps_hat, noise, active, tables, *,
+                     clip: float = 3.0, block: int = 4096,
+                     interpret: bool = True):
+    """Timestep-indexed view of :func:`traj_masked_step` over the dense
+    ancestral table (``masked_step_tables``): per-lane t in {1..T} (ANY
+    value — clamped) maps to column T - t.  Kept as the serving-era API;
+    the engine itself now steps trajectory columns directly.
+    """
+    T = tables.shape[1]
+    cols = T - jnp.clip(t, 1, T)
+    return traj_masked_step(x, cols, eps_hat, noise, active, tables,
+                            clip=clip, block=block, interpret=interpret)

@@ -57,3 +57,23 @@ def ddpm_masked_step(sched, x_t, t, eps_hat, noise, active, *,
         tables = _ddpm.masked_step_tables(sched)
     return _ddpm.ddpm_masked_step(x_t, t, eps_hat, noise, active, tables,
                                   clip=clip, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("clip",))
+def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
+                     clip: float = 3.0):
+    """Fused masked TRAJECTORY tick: per-lane column gather from a
+    canonical (4, C) coefficient table (``sampler.Sampler.tables`` /
+    ``masked_step_tables``) + update + clip + active select in ONE pallas
+    program — strided DDIM and dense DDPM lanes share the kernel."""
+    return _ddpm.traj_masked_step(x, cols, eps_hat, noise, active, tables,
+                                  clip=clip, interpret=_interpret())
+
+
+@jax.jit
+def ddpm_index_step(x, cols, eps_hat, noise, tables):
+    """Fused trajectory step for every sample (no mask): gathers per-sample
+    (c_eps, 1/√ar, σ, keep) from the canonical table and runs the
+    :func:`ddpm_step` kernel."""
+    coefs = _ddpm.index_step_coefs(tables, cols)
+    return _ddpm.ddpm_step(x, eps_hat, noise, coefs, interpret=_interpret())

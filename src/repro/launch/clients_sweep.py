@@ -31,6 +31,13 @@ def _parse_args(argv=None):
     ap.add_argument("--step-backend", default="jnp",
                     choices=["jnp", "pallas", "pallas_masked"],
                     help="denoise-tick StepBackend used by trainer.sample")
+    ap.add_argument("--sampler", default="ddpm", choices=["ddpm", "ddim"],
+                    help="trajectory family trainer.sample walks (ddim "
+                         "strides the chain to --num-steps)")
+    ap.add_argument("--num-steps", type=int, default=0,
+                    help="DDIM trajectory length K (0 = dense T steps)")
+    ap.add_argument("--eta", type=float, default=0.0,
+                    help="DDIM stochasticity in [0,1]")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU dry environments)")
     ap.add_argument("--mesh-shape", default="",
@@ -86,7 +93,9 @@ def main(argv=None):
         for n in args.clients:
             cfg = TrainerConfig(n_clients=n, T=args.T,
                                 cut_ratio=args.cut_ratio,
-                                step_backend=args.step_backend)
+                                step_backend=args.step_backend,
+                                sampler=args.sampler,
+                                sampler_steps=args.num_steps, eta=args.eta)
             tr = CollaFuseTrainer(cfg, init_fn, apply_fn, mesh=mesh)
             batches = data_for(n)
             sec, metrics = timed_rounds(tr, batches)
@@ -94,6 +103,12 @@ def main(argv=None):
                       [metrics[k] for k in ("server_loss",) if k in metrics])
             assert losses and all(v == v for v in losses), \
                 f"NaN/absent losses: {losses}"
+            # exercise the sampling seam the flags configure: split
+            # inference on the chosen trajectory/backend must stay finite
+            gen = tr.sample(jax.random.PRNGKey(5),
+                            (2, args.image, args.image, 1))
+            assert bool(jax.numpy.isfinite(gen).all()), \
+                "non-finite split sample"
             speedup = None                    # null in the JSON artefact
             if args.compare_looped:
                 looped = CollaFuseTrainer(

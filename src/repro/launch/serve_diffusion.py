@@ -36,6 +36,16 @@ def _parse_args(argv=None):
                     help="denoise-tick StepBackend; pallas_masked fuses the "
                          "whole masked tick into one kernel (interpret mode "
                          "unless REPRO_PALLAS_INTERPRET=0)")
+    ap.add_argument("--sampler", default="ddpm", choices=["ddpm", "ddim"],
+                    help="trajectory/update family requests walk: ddpm = "
+                         "dense T-step chain; ddim = strided --num-steps "
+                         "subsequence (the cut maps to the nearest "
+                         "trajectory point)")
+    ap.add_argument("--num-steps", type=int, default=0,
+                    help="DDIM trajectory length K (0 = dense T steps)")
+    ap.add_argument("--eta", type=float, default=0.0,
+                    help="DDIM stochasticity in [0,1]; 1 on the dense "
+                         "trajectory is the DDPM ancestral step")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="0 = all at tick 0; k = one request every k ticks")
     ap.add_argument("--devices", type=int, default=0,
@@ -59,6 +69,7 @@ def main(argv=None):
     import jax
 
     from repro.configs.base import UNetConfig
+    from repro.diffusion.sampler import make_sampler
     from repro.diffusion.schedule import cosine_schedule
     from repro.models import unet
     from repro.models.layers import ShardCtx
@@ -68,9 +79,17 @@ def main(argv=None):
     from repro.serve.engine import sequential_fns, time_sequential
 
     d, m = mesh.shape["data"], mesh.shape["model"]
+    if args.sampler == "ddpm" and args.num_steps:
+        raise SystemExit("--num-steps strides the chain, which needs "
+                         "--sampler ddim (ddpm is dense-only)")
+    samplers = {"ddpm": make_sampler(args.T)}
+    if args.sampler == "ddim":
+        samplers["ddim"] = make_sampler(args.T, "ddim", args.num_steps,
+                                        args.eta)
     print(f"serve_diffusion: mesh=data:{d}xmodel:{m} slots={args.slots} "
           f"requests={args.requests} T={args.T} policy={args.policy} "
-          f"backend={args.step_backend}")
+          f"backend={args.step_backend} "
+          f"sampler={samplers[args.sampler].describe()}")
 
     ucfg = dataclasses.replace(
         UNetConfig().reduced(), image_size=args.image, base_channels=8,
@@ -96,15 +115,16 @@ def main(argv=None):
                     batch=1 + i % args.max_batch,
                     cut_ratio=args.cut_ratios[i % len(args.cut_ratios)],
                     client_idx=i % args.clients,
-                    arrival_tick=i * args.arrival_every)
+                    arrival_tick=i * args.arrival_every,
+                    sampler=args.sampler)
             for i in range(args.requests)
         ]
 
         eng = ServeEngine(
             sched, apply_fn, server_params, (args.image, args.image, 1),
             slots=args.slots,
-            scheduler=make_scheduler(args.policy, args.T),
-            step_backend=args.step_backend, mesh=mesh)
+            scheduler=make_scheduler(args.policy, args.T, samplers=samplers),
+            step_backend=args.step_backend, mesh=mesh, samplers=samplers)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
         res = eng.serve(list(requests), client_stack)      # warm jit cache
@@ -124,7 +144,8 @@ def main(argv=None):
             server_fn, client_fn_for = sequential_fns(
                 apply_fn, server_params, client_stack)
             seq_s = time_sequential(sched, requests, server_fn,
-                                    client_fn_for, (args.image, args.image, 1))
+                                    client_fn_for, (args.image, args.image, 1),
+                                    samplers=samplers)
             s["sequential_s"] = seq_s
             s["speedup_vs_sequential"] = seq_s / res.wall_s
             print(f"sequential split_sample: {seq_s:.2f}s -> "

@@ -8,28 +8,43 @@ call per request costs O(requests) dispatch chains.  This engine is the
 diffusion analogue of LLM continuous batching:
 
 * Generation requests (heterogeneous cut-ratios, batch sizes, arrival
-  ticks) queue in a scheduler and are admitted into a fixed-capacity array
-  of SLOTS, one image ("lane") per slot.
-* Every engine tick runs ONE jitted masked denoise step across the whole
-  slot array — per-slot timestep counters step t_i -> t_i-1; retired/empty
-  slots are masked out.  The step itself is a ``StepBackend``
+  ticks, SAMPLERS) queue in a scheduler and are admitted into a
+  fixed-capacity array of SLOTS, one image ("lane") per slot.
+* Every slot walks a TRAJECTORY (``repro.diffusion.sampler``) — the dense
+  {T..1} DDPM chain or a strided K-step DDIM subsequence, chosen per
+  request from the engine's registered sampler menu.  Per-slot counters
+  are trajectory POSITIONS, not raw timesteps: a DDIM-50 request retires
+  after ~50 server ticks where a dense T=1000 request needs ~(1-c)·1000 —
+  a direct serving-throughput multiplier, gated ≥5x in ``benchmarks.run
+  --only ddim_speedup``.
+* Every engine tick runs ONE jitted masked trajectory step across the
+  whole slot array: all registered samplers' coefficient tables are
+  concatenated column-wise ONCE at construction, and each lane gathers its
+  own column — so heterogeneous samplers, cut-ratios and timesteps share
+  one program.  The step itself is a ``StepBackend``
   (``repro.diffusion.backend``) taken once at construction; under
   ``"pallas_masked"`` the whole gather→step→clip→select tick is ONE fused
-  Pallas program — so server throughput is O(1) dispatches per tick
-  regardless of how many requests are in flight.
-* When a slot reaches its request's t_split the engine retires it and
-  emits x_{t_split} (the DISCLOSED tensor of the protocol); freed slots are
-  refilled from the queue mid-flight, between ticks.
-* A vmapped client-segment finisher completes t_split..1 for every emitted
-  image under its client's private model, again with masked per-lane
-  counters so heterogeneous t_split share one program.
+  Pallas program — O(1) dispatches per tick regardless of how many
+  requests are in flight.
+* When a slot reaches its request's cut position
+  (``CutPlan.cut_index(sampler)`` — the trajectory point nearest t_split)
+  the engine retires it and emits the DISCLOSED tensor of the protocol (x
+  at the cut); freed slots are refilled from the queue mid-flight.
+* A client-segment finisher completes the remaining trajectory positions
+  for every emitted image under its client's private model.  Lanes are
+  GROUPED BY CLIENT before the masked loop: each client's group takes one
+  batched model call against that client's params row (vmap pairs the
+  stacked client axis with the grouped lane axis positionally), replacing
+  the old per-lane gather of a full private-model copy — O(n_clients)
+  param traffic per step instead of O(lanes).
 
 Key discipline: lane i of a request uses ``fold_in(req.key, i)`` split
 into (k_init, k_srv, k_cli) — see :func:`repro.core.collafuse.lane_keys` —
 and within a segment follows ``sample_range``'s ``k, k_n = split(k)`` chain
 exactly, so every lane is replayed bit-for-bit in key space by
-:func:`repro.core.collafuse.split_sample_lane` (numerical agreement is
-asserted in tests/test_serve.py).
+:func:`repro.core.collafuse.split_sample_lane` with the same sampler
+(numerical agreement is asserted in tests/test_serve.py and
+tests/test_sampler.py).
 """
 from __future__ import annotations
 
@@ -45,10 +60,10 @@ import numpy as np
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
 from repro.diffusion.backend import BackendLike, get_backend
+from repro.diffusion.sampler import Sampler, default_samplers
 from repro.diffusion.schedule import DiffusionSchedule
-from repro.kernels.ddpm_step import masked_step_tables
 from repro.serve.metrics import ServeMetrics
-from repro.serve.scheduler import FIFOScheduler, Request
+from repro.serve.scheduler import CutRatioScheduler, FIFOScheduler, Request
 
 
 @dataclasses.dataclass
@@ -57,7 +72,7 @@ class Completion:
     finisher) the final images."""
 
     request: Request
-    x_mid: np.ndarray                  # [batch, H, W, C] at t_split
+    x_mid: np.ndarray                  # [batch, H, W, C] at the cut
     admit_tick: int
     retire_tick: int
     k_cli: np.ndarray = None           # [batch, 2] client-segment keys
@@ -83,16 +98,25 @@ class ServeEngine:
 
     ``step_backend`` names (or is) the StepBackend executing the masked
     denoise update (``repro.diffusion.backend``): resolved ONCE here, bound
-    together with the clip and the hoisted (3, T) coefficient table into
-    ``self._masked_step``, which both the tick and the client finisher call
-    — no per-tick coefficient recompute, no flag re-derivation in
-    ``_make_tick``/``_make_finish``.
+    together with the clip and the hoisted trajectory coefficient table
+    into ``self._masked_index``, which both the tick and the client
+    finisher call — no per-tick coefficient recompute, no flag
+    re-derivation in ``_make_tick``/``_make_finish``.
+
+    ``samplers`` is the engine's sampler MENU ({name: Sampler}) — the
+    trajectories requests may walk (``Request.sampler`` names one; default
+    menu is the dense DDPM chain under ``"ddpm"``).  All menu tables are
+    concatenated column-wise once here; per-lane columns select into the
+    concatenation, so mixed-sampler traffic shares one tick program.  A
+    :class:`CutRatioScheduler` supplied without a sampler menu inherits
+    this one, so its SJF cost model counts trajectory steps.
     """
 
     def __init__(self, sched: DiffusionSchedule, apply_fn: Callable,
                  server_params, image_shape, *, slots: int = 32,
                  scheduler=None, clip: float = 3.0,
                  step_backend: BackendLike = None, mesh=None,
+                 samplers: Optional[Dict[str, Sampler]] = None,
                  flops_per_call: Optional[float] = None):
         self.sched = sched
         self.apply_fn = apply_fn
@@ -103,11 +127,33 @@ class ServeEngine:
             else FIFOScheduler()
         self.clip = clip
         self.backend = get_backend(step_backend)
-        # hoisted out of the tick: one (3, T) schedule table, gathered
-        # per-lane in SMEM by the fused kernel (ignored by jnp backends)
-        self._masked_step = functools.partial(
-            self.backend.masked_step, sched, clip=clip,
-            tables=masked_step_tables(sched))
+        self.samplers = dict(samplers) if samplers is not None \
+            else default_samplers(sched.T)
+        for name, s in self.samplers.items():
+            assert s.trajectory.T == sched.T, \
+                f"sampler {name!r} built for T={s.trajectory.T}, " \
+                f"engine schedule has T={sched.T}"
+        if isinstance(self.scheduler, CutRatioScheduler) \
+                and self.scheduler.samplers is None:
+            self.scheduler.samplers = self.samplers
+        # hoisted out of the tick: every registered trajectory's (4, K)
+        # coefficient table concatenated column-wise (gathered per-lane in
+        # SMEM by the fused kernel), plus the per-trajectory column offset,
+        # length, and padded timestep rows the tick gathers model-t from
+        self._traj_ids = {n: i for i, n in enumerate(self.samplers)}
+        menu = list(self.samplers.values())
+        lens = [s.K for s in menu]
+        kmax = max(lens)
+        self._kmax = kmax
+        self._tables = jnp.concatenate([s.tables(sched) for s in menu],
+                                       axis=1)
+        self._offsets = jnp.asarray(
+            np.cumsum([0] + lens[:-1]), jnp.int32)
+        self._ts_pad = jnp.asarray(
+            [list(s.trajectory.timesteps) + [1] * (kmax - s.K)
+             for s in menu], jnp.int32)
+        self._masked_index = functools.partial(
+            self.backend.masked_index_step, tables=self._tables, clip=clip)
         self.mesh = mesh
         n_params = sum(x.size for x in jax.tree.leaves(server_params))
         # forward-only proxy (inference): ~2 FLOP per param per call
@@ -132,8 +178,9 @@ class ServeEngine:
         s = self.slots
         state = {
             "x": jnp.zeros((s,) + self.image_shape, jnp.float32),
-            "t": jnp.zeros((s,), jnp.int32),
-            "t_split": jnp.zeros((s,), jnp.int32),
+            "pos": jnp.zeros((s,), jnp.int32),      # trajectory position
+            "end": jnp.zeros((s,), jnp.int32),      # cut index (retire at)
+            "traj": jnp.zeros((s,), jnp.int32),     # sampler-menu id
             "key": jnp.zeros((s, 2), jnp.uint32),
             "active": jnp.zeros((s,), bool),
         }
@@ -142,24 +189,30 @@ class ServeEngine:
         return state
 
     def _make_tick(self):
-        sched, shape = self.sched, self.image_shape
+        shape = self.image_shape
+        offsets, ts_pad, kmax = self._offsets, self._ts_pad, self._kmax
 
         def tick(state, params):
-            # masked denoise: every live lane steps t_i -> t_i - 1 in ONE
-            # program; retired/empty lanes ride along untouched
-            stepping = state["active"] & (state["t"] > state["t_split"])
-            t_safe = jnp.clip(state["t"], 1, sched.T)
-            eps_hat = self.apply_fn(params, state["x"], t_safe)
+            # masked trajectory step: every live lane executes ITS next
+            # trajectory position in ONE program (per-lane column gather
+            # into the concatenated sampler tables); retired/empty lanes
+            # ride along untouched
+            stepping = state["active"] & (state["pos"] < state["end"])
+            pos_c = jnp.clip(state["pos"], 0, kmax - 1)
+            t_lane = ts_pad[state["traj"], pos_c]    # model conditions on t
+            eps_hat = self.apply_fn(params, state["x"], t_lane)
             ks = jax.vmap(jax.random.split)(state["key"])
             k_next, k_n = ks[:, 0], ks[:, 1]
             noise = jax.vmap(
                 lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
-            x = self._masked_step(state["x"], state["t"], eps_hat, noise,
-                                  stepping)
-            t = jnp.where(stepping, state["t"] - 1, state["t"])
+            cols = offsets[state["traj"]] + pos_c
+            x = self._masked_index(state["x"], cols, eps_hat, noise,
+                                   stepping)
+            pos = jnp.where(stepping, state["pos"] + 1, state["pos"])
             key = jnp.where(stepping[:, None], k_next, state["key"])
-            done = stepping & (t <= state["t_split"])   # now holds x_{t_split}
-            new = {"x": x, "t": t, "t_split": state["t_split"], "key": key,
+            done = stepping & (pos >= state["end"])  # now holds x at the cut
+            new = {"x": x, "pos": pos, "end": state["end"],
+                   "traj": state["traj"], "key": key,
                    "active": state["active"] & ~done}
             if self._slot_shardings is not None:
                 new = jax.lax.with_sharding_constraint(new,
@@ -168,40 +221,66 @@ class ServeEngine:
         return tick
 
     def _make_finish(self):
-        sched, shape = self.sched, self.image_shape
+        shape = self.image_shape
+        offsets, ts_pad, kmax = self._offsets, self._ts_pad, self._kmax
 
-        def model_lane(stack, ci, xi, ti):
-            p = jax.tree.map(lambda a: a[ci], stack)
-            return self.apply_fn(p, xi[None], ti[None])[0]
+        def finish(client_stack, x, pos, end, traj, keys, valid):
+            # lanes arrive GROUPED BY CLIENT: leading axis = client, second
+            # = (padded) lanes of that client.  vmap pairs each client's
+            # param row with its lane group positionally — each step is one
+            # batched model call per client, with NO per-lane gather of a
+            # full private-model copy from the stack.
+            n_steps = jnp.max(jnp.where(valid, end - pos, 0))
 
-        def finish(client_stack, x, t_start, client_idx, keys):
-            def body(_, carry):
-                xc, t, key = carry
-                active = t >= 1
-                t_safe = jnp.clip(t, 1, sched.T)
-                eps = jax.vmap(lambda ci, xi, ti: model_lane(
-                    client_stack, ci, xi, ti))(client_idx, xc, t_safe)
-                ks = jax.vmap(jax.random.split)(key)
-                k_next, k_n = ks[:, 0], ks[:, 1]
-                noise = jax.vmap(
-                    lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
-                xc = self._masked_step(xc, t, eps, noise, active)
-                t = jnp.where(active, t - 1, t)
-                key = jnp.where(active[:, None], k_next, key)
-                return (xc, t, key)
-            # traced bound -> one while-program shared by every t_split mix
-            x, _, _ = jax.lax.fori_loop(0, jnp.max(t_start), body,
-                                        (x, t_start, keys))
-            return x
+            def per_client(params, xg, pg, eg, tg, kg, vg):
+                def body(_, carry):
+                    xc, p, key = carry
+                    act = vg & (p < eg)
+                    p_c = jnp.clip(p, 0, kmax - 1)
+                    t_l = ts_pad[tg, p_c]
+                    eps = self.apply_fn(params, xc, t_l)
+                    ks = jax.vmap(jax.random.split)(key)
+                    k_next, k_n = ks[:, 0], ks[:, 1]
+                    noise = jax.vmap(
+                        lambda k: jax.random.normal(k, shape,
+                                                    jnp.float32))(k_n)
+                    cols = offsets[tg] + p_c
+                    xc = self._masked_index(xc, cols, eps, noise, act)
+                    p = jnp.where(act, p + 1, p)
+                    key = jnp.where(act[:, None], k_next, key)
+                    return (xc, p, key)
+                # traced bound -> one while-program shared by every cut mix
+                xo, _, _ = jax.lax.fori_loop(0, n_steps, body, (xg, pg, kg))
+                return xo
+            return jax.vmap(per_client)(client_stack, x, pos, end, traj,
+                                        keys, valid)
         return finish
 
     # ------------------------------------------------------------------
     # host-side admission / retirement
     # ------------------------------------------------------------------
+    # -- sampler plumbing ----------------------------------------------
+    def _sampler_of(self, req: Request) -> Sampler:
+        assert req.sampler in self.samplers, \
+            f"request {req.req_id} names sampler {req.sampler!r}; engine " \
+            f"menu: {sorted(self.samplers)}"
+        return self.samplers[req.sampler]
+
+    def _cut_of(self, req: Request) -> int:
+        """Trajectory position the request's lanes retire at (= server
+        model calls it costs)."""
+        return CutPlan(self.sched.T, req.cut_ratio).cut_index(
+            self._sampler_of(req))
+
+    def _steps_of(self, req: Request):
+        """(server, client) model-call split on the request's trajectory —
+        the metrics' FLOP accounting."""
+        cut = self._cut_of(req)
+        return cut, self._sampler_of(req).K - cut
+
     def _admit(self, state, req: Request, lanes: List[int], now: int,
                inflight: Dict, lane_req: np.ndarray, lane_img: np.ndarray,
                metrics: ServeMetrics):
-        plan = CutPlan(self.sched.T, req.cut_ratio)
         k_init, k_srv, k_cli = collafuse.lane_keys(req.key, req.batch)
         x_T = jax.vmap(
             lambda k: jax.random.normal(k, self.image_shape, jnp.float32))(
@@ -209,8 +288,9 @@ class ServeEngine:
         idx = jnp.asarray(lanes)
         state = {
             "x": state["x"].at[idx].set(x_T),
-            "t": state["t"].at[idx].set(self.sched.T),
-            "t_split": state["t_split"].at[idx].set(plan.t_split),
+            "pos": state["pos"].at[idx].set(0),
+            "end": state["end"].at[idx].set(self._cut_of(req)),
+            "traj": state["traj"].at[idx].set(self._traj_ids[req.sampler]),
             "key": state["key"].at[idx].set(k_srv),
             "active": state["active"].at[idx].set(True),
         }
@@ -227,27 +307,25 @@ class ServeEngine:
     def run(self, requests: List[Request],
             max_ticks: Optional[int] = None) -> ServeResult:
         """Serve the SERVER segment of every request: admit from the queue,
-        tick until drained, retire x_{t_split} per request.  Completions
+        tick until drained, retire x at the cut per request.  Completions
         carry ``x_mid`` only; :meth:`serve` adds the client finish."""
-        T = self.sched.T
         assert len({r.req_id for r in requests}) == len(requests), \
             "duplicate req_ids: completions/inflight are keyed by req_id"
         for r in requests:
             assert r.batch <= self.slots, \
                 f"request {r.req_id} batch {r.batch} > capacity {self.slots}"
-        # c=1 requests need zero server steps: they complete at arrival
-        # (x_mid = x_T) without ever occupying a slot
-        local_only = sorted(
-            (r for r in requests if CutPlan(T, r.cut_ratio).t_split >= T),
-            key=lambda r: r.arrival_tick)
+            self._sampler_of(r)                    # fail fast on bad names
+        # zero-server-step requests (cut position 0, e.g. c=1) complete at
+        # arrival (x_mid = x_T) without ever occupying a slot
+        local_only = sorted((r for r in requests if self._cut_of(r) == 0),
+                            key=lambda r: r.arrival_tick)
         for r in requests:
-            if CutPlan(T, r.cut_ratio).t_split < T:
+            if self._cut_of(r) > 0:
                 self.scheduler.add(r)
         if max_ticks is None:
             span = max((r.arrival_tick for r in requests), default=0)
-            total = sum(CutPlan(T, r.cut_ratio).n_server_steps
-                        for r in requests)
-            max_ticks = span + total + T + 16      # generous liveness bound
+            total = sum(self._cut_of(r) for r in requests)
+            max_ticks = span + total + self._kmax + 16   # liveness bound
 
         state = self._init_state()
         lane_req = np.full(self.slots, -1, np.int64)
@@ -319,36 +397,70 @@ class ServeEngine:
                     "starvation?")
 
         wall = time.perf_counter() - t0
-        summary = metrics.summary(wall, T, self.flops_per_call, requests)
+        summary = metrics.summary(wall, self.sched.T, self.flops_per_call,
+                                  requests, steps_of=self._steps_of)
         return ServeResult(completions=completions, summary=summary,
                            wall_s=wall)
 
     # ------------------------------------------------------------------
     def finish_clients(self, result: ServeResult, client_stack) -> None:
-        """Complete t_split..1 for every emitted image under its client's
-        private model — one vmapped masked program over all lanes of all
-        completed requests.  Fills ``Completion.x0`` in place."""
+        """Complete the remaining trajectory positions for every emitted
+        image under its client's private model — ONE masked program, lanes
+        grouped by ``client_idx`` (compacted to the clients present, padded
+        to the widest group) so each client's group steps against its own
+        param row with no per-lane stack gather.  Padding lanes ride the
+        loop masked (they pay model FLOPs but no param traffic); heavily
+        skewed per-client traffic bounds the waste at n_present x widest.
+        Fills ``Completion.x0`` in place."""
         order = sorted(result.completions)
         if not order:
             return
-        xs, ts, cis, keys, spans = [], [], [], [], []
+        n_clients = jax.tree.leaves(client_stack)[0].shape[0]
+        by_client: Dict[int, List] = {}
         for rid in order:
             comp = result.completions[rid]
             r = comp.request
-            t_split = CutPlan(self.sched.T, r.cut_ratio).t_split
-            spans.append((rid, len(xs), r.batch))
-            xs.extend(np.asarray(comp.x_mid))
-            ts.extend([t_split] * r.batch)
-            cis.extend([r.client_idx] * r.batch)
-            keys.extend(comp.k_cli)
-        x0 = self._finish(client_stack,
-                          jnp.asarray(np.stack(xs)),
-                          jnp.asarray(ts, jnp.int32),
-                          jnp.asarray(cis, jnp.int32),
-                          jnp.asarray(np.stack(keys)))
-        x0 = np.asarray(x0)
-        for rid, start, batch in spans:
-            result.completions[rid].x0 = x0[start:start + batch]
+            assert 0 <= r.client_idx < n_clients, \
+                f"request {r.req_id} names client {r.client_idx}; stack " \
+                f"holds {n_clients}"
+            cut = self._cut_of(r)
+            K = self._sampler_of(r).K
+            tid = self._traj_ids[r.sampler]
+            for i in range(r.batch):
+                by_client.setdefault(r.client_idx, []).append(
+                    (rid, i, comp.x_mid[i], cut, K, tid, comp.k_cli[i]))
+        # compact to the clients that actually have lanes (their param rows
+        # gathered ONCE, not per lane per step) so idle clients cost nothing
+        present = sorted(by_client)
+        groups = [by_client[ci] for ci in present]
+        stack_used = jax.tree.map(lambda a: a[jnp.asarray(present)],
+                                  client_stack)
+        width = max(len(g) for g in groups)
+        shp = (len(present), width)
+        x = np.zeros(shp + self.image_shape, np.float32)
+        pos = np.zeros(shp, np.int32)
+        end = np.zeros(shp, np.int32)
+        traj = np.zeros(shp, np.int32)
+        keys = np.zeros(shp + (2,), np.uint32)
+        valid = np.zeros(shp, bool)
+        for ci, g in enumerate(groups):
+            for j, (rid, i, xm, cut, K, tid, k) in enumerate(g):
+                x[ci, j] = xm
+                pos[ci, j], end[ci, j], traj[ci, j] = cut, K, tid
+                keys[ci, j] = k
+                valid[ci, j] = True
+        x0 = np.asarray(self._finish(
+            stack_used, jnp.asarray(x), jnp.asarray(pos),
+            jnp.asarray(end), jnp.asarray(traj), jnp.asarray(keys),
+            jnp.asarray(valid)))
+        outs = {rid: np.zeros((result.completions[rid].request.batch,) +
+                              self.image_shape, np.float32)
+                for rid in order}
+        for ci, g in enumerate(groups):
+            for j, (rid, i, *_rest) in enumerate(g):
+                outs[rid][i] = x0[ci, j]
+        for rid in order:
+            result.completions[rid].x0 = outs[rid]
 
     def serve(self, requests: List[Request], client_stack=None,
               max_ticks: Optional[int] = None) -> ServeResult:
@@ -371,16 +483,20 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 def serve_sequential(sched: DiffusionSchedule, requests: List[Request],
                      server_fn: Callable, client_fn_for: Callable,
-                     image_shape) -> Dict[int, Any]:
+                     image_shape, samplers=None) -> Dict[int, Any]:
     """One ``split_sample`` call per request, in arrival order — the
     pre-engine serving path (O(requests) dispatch chains).  Used as the
-    throughput baseline for the ≥3x continuous-batching gate."""
+    throughput baseline for the ≥3x continuous-batching gate.  ``samplers``
+    (a {name: Sampler} menu, as on :class:`ServeEngine`) resolves each
+    request's trajectory; absent, every request walks the dense chain."""
     outs = {}
     for r in sorted(requests, key=lambda r: (r.arrival_tick, r.req_id)):
         plan = CutPlan(sched.T, r.cut_ratio)
+        smp = samplers[r.sampler] if samplers is not None else None
         x0, x_mid = collafuse.split_sample(
             sched, plan, server_fn, client_fn_for(r.client_idx), r.key,
-            (r.batch,) + tuple(image_shape), return_intermediate=True)
+            (r.batch,) + tuple(image_shape), return_intermediate=True,
+            sampler=smp)
         outs[r.req_id] = (x0, x_mid)
     jax.block_until_ready([v[0] for v in outs.values()])
     return outs
@@ -400,12 +516,14 @@ def sequential_fns(apply_fn, server_params, client_stack):
 
 def time_sequential(sched: DiffusionSchedule, requests: List[Request],
                     server_fn: Callable, client_fn_for: Callable,
-                    image_shape) -> float:
+                    image_shape, samplers=None) -> float:
     """Warmup pass + timed wall-clock of the sequential baseline.  Shared
     by ``launch/serve_diffusion.py --compare-sequential`` and the gated
     ``benchmarks.run --only serve_continuous`` so the baseline protocol
     cannot drift between the launcher and the benchmark."""
-    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape)
+    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape,
+                     samplers=samplers)
     t0 = time.perf_counter()
-    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape)
+    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape,
+                     samplers=samplers)
     return time.perf_counter() - t0

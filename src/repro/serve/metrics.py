@@ -10,11 +10,11 @@ applied to inference traffic).
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.collafuse import CutPlan, flops_split
+from repro.core.collafuse import CutPlan, flops_split_steps
 
 
 class ServeMetrics:
@@ -55,9 +55,15 @@ class ServeMetrics:
         return self._retire[req_id]["tick"] - self._admit[req_id]["tick"]
 
     def summary(self, wall_s: float, T: int, flops_per_call: float,
-                requests) -> Dict:
+                requests, steps_of: Optional[Callable] = None) -> Dict:
         """Aggregate one run over ``requests`` (the completed Request
-        objects) into the BENCH_serve.json record."""
+        objects) into the BENCH_serve.json record.
+
+        ``steps_of(req) -> (n_server_steps, n_client_steps)`` supplies the
+        per-request model-call counts — the engine passes its samplers'
+        trajectory-relative split so strided (DDIM) requests are accounted
+        at what they actually cost; the default is the dense CutPlan split.
+        """
         lat_t = np.array([self.latency_ticks(r.req_id) for r in requests
                           if self.latency_ticks(r.req_id) is not None],
                          dtype=np.float64)
@@ -65,11 +71,14 @@ class ServeMetrics:
                           self._admit[r.req_id]["wall"]
                           for r in requests if r.req_id in self._retire],
                          dtype=np.float64)
+        if steps_of is None:
+            steps_of = lambda r: (CutPlan(T, r.cut_ratio).n_server_steps,
+                                  CutPlan(T, r.cut_ratio).n_client_steps)
         server_f = client_f = 0.0
         images = 0
         for r in requests:
-            split = flops_split(CutPlan(T, r.cut_ratio), flops_per_call,
-                                r.batch)
+            n_srv, n_cli = steps_of(r)
+            split = flops_split_steps(n_srv, n_cli, flops_per_call, r.batch)
             server_f += split["server_flops"]
             client_f += split["client_flops"]
             images += r.batch

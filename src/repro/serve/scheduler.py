@@ -9,19 +9,24 @@ into the currently free slots.  Two policies:
   (a request that does not fit in the free slots blocks everything behind
   it).  Trivially starvation-free: position in the queue only decreases.
 * :class:`CutRatioScheduler` — shortest-server-job-first: requests with the
-  fewest remaining *server* steps ((1-c)·T — high cut-ratio = cheap for the
-  server) are admitted first, which maximises slot turnover under mixed
-  cut-ratios.  Pure SJF starves low-c requests behind a stream of high-c
-  ones, so the score is aged: ``score = n_server_steps - aging · wait``.
-  After at most ``T / aging`` ticks of waiting a request outranks any fresh
-  arrival (whose score is ≥ 0), so every queued request is admitted within
-  a bounded number of ticks (asserted in tests/test_serve.py).
+  fewest remaining *server* steps are admitted first, which maximises slot
+  turnover under mixed cut-ratios.  The cost of a request is its
+  TRAJECTORY step count above the cut (``CutPlan.traj_server_steps`` for
+  its sampler): a DDIM-50 request at c=0 is a ~50-tick job, not a
+  1000-tick one — scoring the dense (1-c)·T would misorder mixed
+  DDPM/DDIM traffic (a cheap strided job would queue behind dense jobs it
+  should overtake).  Pure SJF starves expensive requests behind a stream
+  of cheap ones, so the score is aged: ``score = server_steps - aging ·
+  wait``.  After at most ``T / aging`` ticks of waiting a request outranks
+  any fresh arrival (whose score is ≥ 0; trajectory costs are ≤ T), so
+  every queued request is admitted within a bounded number of ticks
+  (asserted in tests/test_serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 @dataclasses.dataclass(eq=False)
@@ -40,10 +45,15 @@ class Request:
     cut_ratio: float = 0.5      # c: server runs (1-c)·T steps, client c·T
     client_idx: int = 0         # which private model finishes t_split..1
     arrival_tick: int = 0       # not visible to the engine before this tick
+    sampler: str = "ddpm"       # trajectory/update family, from the
+    #                             engine's registered sampler menu ("ddpm"
+    #                             = dense chain; e.g. "ddim50" = strided)
 
     def __post_init__(self):
         assert self.batch >= 1, self.batch
         assert 0.0 <= self.cut_ratio <= 1.0, self.cut_ratio
+        assert self.client_idx >= 0, self.client_idx   # finisher indexes a
+        #                                                stacked client axis
 
 
 class FIFOScheduler:
@@ -93,18 +103,38 @@ class FIFOScheduler:
 
 
 class CutRatioScheduler(FIFOScheduler):
-    """Shortest-server-job-first over (1-c)·T with aging (no starvation)."""
+    """Shortest-server-job-first over TRAJECTORY server steps with aging
+    (no starvation).
 
-    def __init__(self, T: int, aging: float = 1.0):
+    ``samplers`` maps ``Request.sampler`` names to
+    :class:`repro.diffusion.sampler.Sampler` objects so the cost model
+    counts what the server will actually execute — the trajectory step
+    count above the cut.  The serving engine injects its own menu at
+    construction when the scheduler arrives without one, so SJF and the
+    engine can never disagree about a request's cost.  Unknown/absent
+    sampler names fall back to the dense (1-c)·T estimate.
+    """
+
+    def __init__(self, T: int, aging: float = 1.0,
+                 samplers: Optional[Dict[str, Any]] = None):
         super().__init__()
         assert aging > 0.0, "aging=0 reintroduces starvation"
         self.T = T
         self.aging = aging
+        self.samplers = samplers
+
+    def server_cost(self, req: Request) -> float:
+        """Server model calls this request still needs: its trajectory's
+        step count above the cut (== (1-c)·T only for the dense chain)."""
+        if self.samplers and req.sampler in self.samplers:
+            from repro.core.collafuse import CutPlan
+            return float(CutPlan(self.T, req.cut_ratio).traj_server_steps(
+                self.samplers[req.sampler]))
+        return (1.0 - req.cut_ratio) * self.T
 
     def _score(self, req: Request, now: int) -> float:
-        server_steps = (1.0 - req.cut_ratio) * self.T
         wait = max(0, now - req.arrival_tick)
-        return server_steps - self.aging * wait
+        return self.server_cost(req) - self.aging * wait
 
     def _candidates(self, now: int) -> List[Request]:
         """Aged-score order: once a starved request ages to the top it
@@ -115,9 +145,9 @@ class CutRatioScheduler(FIFOScheduler):
             key=lambda r: (self._score(r, now), self._order[r.req_id]))
 
 
-def make_scheduler(policy: str, T: int, aging: float = 1.0):
+def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None):
     if policy == "fifo":
         return FIFOScheduler()
     if policy == "cut_ratio":
-        return CutRatioScheduler(T, aging=aging)
+        return CutRatioScheduler(T, aging=aging, samplers=samplers)
     raise ValueError(f"unknown scheduling policy: {policy!r}")

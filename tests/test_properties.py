@@ -97,6 +97,104 @@ def test_masked_step_with_all_active_is_denoise_step_bitwise(T, seed,
             np.asarray(stepped).view(np.uint32)).all()
 
 
+# ---------------------------------------------------------------------------
+# Sampler layer: DDIM eta=1 == DDPM ancestral; strided trajectory invariants
+# ---------------------------------------------------------------------------
+@given(T=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ddim_eta1_dense_pair_coefs_equal_ancestral(T, seed):
+    """Coefficient identity: the GENERAL DDIM formula at eta=1 on the
+    dense pair (t, t-1) collapses to the DDPM ancestral coefficients —
+    sigma^2 to the posterior variance, (c_eps, ar) to (beta/sqrt(1-abar),
+    alpha) — for every schedule length."""
+    from repro.diffusion.schedule import (ancestral_pair_coefs,
+                                          ddim_pair_coefs)
+    sched = (cosine_schedule if seed % 2 else linear_schedule)(T)
+    t = jnp.arange(T, 0, -1, dtype=jnp.int32)
+    gen = np.asarray(ddim_pair_coefs(sched, t, t - 1, eta=1.0))
+    anc = np.asarray(ancestral_pair_coefs(sched, t))
+    np.testing.assert_allclose(gen, anc, rtol=1e-3, atol=1e-6)
+
+
+@given(T=st.integers(4, 60), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_ddim_eta1_dense_whole_chain_matches_ddpm(T, seed):
+    """Whole-chain: the dense eta=1 DDIM sampler equals sample_range (the
+    ancestral chain) for arbitrary T — bitwise, since the sampler routes
+    the identity through the ancestral coefficient path."""
+    from repro.diffusion.sampler import (Sampler, dense_trajectory,
+                                         sample_trajectory)
+    sched = cosine_schedule(T)
+    key = jax.random.PRNGKey(seed)
+    model = lambda x, t: 0.1 * x
+    x_T = jax.random.normal(key, (2, 8))
+    ref = ddpm.sample_range(sched, model, key, x_T, T, 1, backend="jnp")
+    out = sample_trajectory(sched, Sampler(dense_trajectory(T), "ddim", 1.0),
+                            model, key, x_T, backend="jnp")
+    assert (np.asarray(out).view(np.uint32) ==
+            np.asarray(ref).view(np.uint32)).all()
+
+
+@given(T=st.integers(4, 60), k=st.integers(2, 12), eta=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2**31 - 1),
+       backend=st.sampled_from(["pallas", "pallas_masked"]))
+@settings(max_examples=12, deadline=None)
+def test_strided_trajectory_backends_agree(T, k, eta, seed, backend):
+    """Strided DDIM chains agree across step backends for arbitrary
+    (T, K, eta)."""
+    from repro.diffusion.sampler import make_sampler, sample_trajectory
+    sched = cosine_schedule(T)
+    smp = make_sampler(T, "ddim", min(k, T), eta=eta)
+    key = jax.random.PRNGKey(seed)
+    model = lambda x, t: 0.1 * x
+    x_T = jax.random.normal(key, (2, 8))
+    ref = sample_trajectory(sched, smp, model, key, x_T, backend="jnp")
+    out = sample_trajectory(sched, smp, model, key, x_T, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(T=st.integers(4, 60), k=st.integers(2, 12),
+       col_junk=st.integers(-10**6, 10**6), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_masked_index_step_inactive_bit_unchanged_any_col(T, k, col_junk,
+                                                          seed):
+    """Fused trajectory tick: inactive lanes emit exact input bits for
+    ARBITRARY junk columns (trajectory-edge and far-out-of-range)."""
+    from repro.diffusion.backend import get_backend
+    from repro.diffusion.sampler import make_sampler
+    sched = cosine_schedule(T)
+    smp = make_sampler(T, "ddim", min(k, T), eta=0.5)
+    tables = smp.tables(sched)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 8))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), (4, 8))
+    z = jax.random.normal(jax.random.fold_in(key, 2), (4, 8))
+    cols = jnp.array([col_junk, 0, smp.K - 1, col_junk], jnp.int32)
+    active = jnp.array([False, True, True, False])
+    out = get_backend("pallas_masked").masked_index_step(x, cols, eps, z,
+                                                         active, tables)
+    for lane in (0, 3):
+        assert (np.asarray(out[lane]).view(np.uint32) ==
+                np.asarray(x[lane]).view(np.uint32)).all()
+
+
+@given(T=st.integers(2, 400), k=st.integers(1, 50), c=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_trajectory_cut_partition_property(T, k, c):
+    """The trajectory cut partitions the step budget and lands on the
+    nearest trajectory point to t_split."""
+    from repro.diffusion.sampler import make_sampler
+    plan = CutPlan(T, c)
+    smp = make_sampler(T, "ddim", min(k, T), eta=0.0)
+    cut = plan.cut_index(smp)
+    assert 0 <= cut <= smp.K
+    assert plan.traj_server_steps(smp) + plan.traj_client_steps(smp) == smp.K
+    traj = smp.trajectory
+    dists = [abs(traj.t_at(j) - plan.t_split) for j in range(traj.K + 1)]
+    assert dists[cut] == min(dists)
+
+
 @given(T=st.integers(2, 40), seed=st.integers(0, 2**31 - 1),
        t_junk=st.integers(-10**6, 10**6))
 @settings(max_examples=12, deadline=None)

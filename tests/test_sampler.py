@@ -1,0 +1,379 @@
+"""Sampler layer: trajectories, cut mapping, per-backend trajectory steps,
+and strided-DDIM serving through the engine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collafuse
+from repro.core.collafuse import CutPlan
+from repro.diffusion import ddpm
+from repro.diffusion.sampler import (Sampler, dense_trajectory, make_sampler,
+                                     sample_trajectory, strided_trajectory)
+from repro.diffusion.schedule import (ancestral_pair_coefs, cosine_schedule,
+                                      ddim_pair_coefs)
+from repro.optim import adamw
+from repro.serve import CutRatioScheduler, Request, ServeEngine
+
+T = 16
+SIZE = 6
+SHAPE = (SIZE, SIZE, 1)
+
+
+def _init_fn(key):
+    d = SIZE * SIZE
+    ks = jax.random.split(key, 2)
+    return {"w1": jax.random.normal(ks[0], (d + 8, 32)) / 6.0,
+            "w2": jax.random.normal(ks[1], (32, d)) / 6.0}
+
+
+def _apply_fn(p, x, t):
+    b = x.shape[0]
+    freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
+    return (h @ p["w2"]).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# trajectories & cut mapping
+# ---------------------------------------------------------------------------
+def test_trajectory_construction_invariants():
+    d = dense_trajectory(T)
+    assert d.K == T and d.is_dense and d.t_at(0) == T and d.t_at(T) == 0
+    s = strided_trajectory(T, 5)
+    assert s.timesteps[0] == T and s.timesteps[-1] == 1
+    assert all(a > b for a, b in zip(s.timesteps, s.timesteps[1:]))
+    assert strided_trajectory(T, T).is_dense
+    with pytest.raises(AssertionError):
+        dense_trajectory(T).__class__((3, 2, 1), T)     # must start at T
+    with pytest.raises(AssertionError):
+        Sampler(strided_trajectory(T, 4), "ddpm")       # ddpm needs dense
+
+
+def test_cut_pos_dense_recovers_exact_split():
+    traj = dense_trajectory(T)
+    for c in (0.0, 0.25, 0.5, 0.75, 1.0):
+        plan = CutPlan(T, c)
+        assert traj.cut_pos(plan.t_split) == T - plan.t_split
+        assert plan.cut_index(make_sampler(T)) == plan.n_server_steps
+
+
+def test_cut_pos_strided_nearest_and_edges():
+    traj = strided_trajectory(16, 6)          # (16, 13, 10, 7, 4, 1)
+    assert traj.cut_pos(16) == 0              # c=1: zero server steps
+    assert traj.cut_pos(0) == traj.K          # c=0: server walks everything
+    for t_split in range(17):
+        j = traj.cut_pos(t_split)
+        dists = [abs(traj.t_at(i) - t_split) for i in range(traj.K + 1)]
+        assert dists[j] == min(dists)
+    # step-count split partitions the trajectory
+    plan = CutPlan(16, 0.5)
+    smp = Sampler(traj, "ddim", 0.0)
+    assert (plan.traj_server_steps(smp) + plan.traj_client_steps(smp)
+            == smp.K)
+
+
+# ---------------------------------------------------------------------------
+# dense equivalence: the trajectory machinery reproduces sample_range
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family,eta", [("ddpm", 1.0), ("ddim", 1.0)])
+def test_dense_trajectory_bitwise_sample_range_jnp(rng, family, eta):
+    """Dense eta=1 sampler == sample_range BIT-FOR-BIT on the jnp backend —
+    the refactor-safety anchor for threading trajectories everywhere."""
+    sched = cosine_schedule(T)
+    model = lambda x, t: 0.1 * x
+    x_T = jax.random.normal(rng, (3,) + SHAPE)
+    ref = ddpm.sample_range(sched, model, rng, x_T, T, 1, backend="jnp")
+    smp = Sampler(dense_trajectory(T), family, eta)
+    out = sample_trajectory(sched, smp, model, rng, x_T, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_masked"])
+def test_dense_trajectory_matches_sample_range_kernels(rng, backend):
+    sched = cosine_schedule(T)
+    model = lambda x, t: 0.1 * x
+    x_T = jax.random.normal(rng, (3,) + SHAPE)
+    ref = ddpm.sample_range(sched, model, rng, x_T, T, 1, backend=backend)
+    out = sample_trajectory(sched, make_sampler(T), model, rng, x_T,
+                            backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ddim_eta1_general_formula_whole_chain_allclose(rng):
+    """The GENERAL ddim coefficient formula at eta=1 (not the routed
+    ancestral path) walks the dense chain to the same result."""
+    sched = cosine_schedule(T)
+    model = lambda x, t: 0.1 * x
+    x_T = jax.random.normal(rng, (3,) + SHAPE)
+    ref = ddpm.sample_range(sched, model, rng, x_T, T, 1, backend="jnp")
+    t = jnp.arange(T, 0, -1, dtype=jnp.int32)
+    tables = ddim_pair_coefs(sched, t, t - 1, eta=1.0)
+    from repro.diffusion.backend import get_backend
+    backend = get_backend("jnp")
+    x, key = x_T, rng
+    for pos in range(T):
+        key, k_n = jax.random.split(key)
+        tb = jnp.full((3,), int(t[pos]), jnp.int32)
+        eps = model(x, tb)
+        noise = jax.random.normal(k_n, x.shape, x.dtype)
+        cols = jnp.full((3,), pos, jnp.int32)
+        x = backend.index_step(x, cols, eps, noise, tables)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# strided steps: backend agreement + edge passthrough
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["pallas", "pallas_masked"])
+@pytest.mark.parametrize("eta", [0.0, 0.5])
+def test_strided_backend_agreement(rng, backend, eta):
+    sched = cosine_schedule(T)
+    model = lambda x, t: 0.1 * x
+    smp = make_sampler(T, "ddim", 5, eta=eta)
+    x_T = jax.random.normal(rng, (3,) + SHAPE)
+    ref = sample_trajectory(sched, smp, model, rng, x_T, backend="jnp")
+    out = sample_trajectory(sched, smp, model, rng, x_T, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_masked"])
+def test_masked_index_step_inactive_bitwise_at_trajectory_edges(rng,
+                                                                backend):
+    """Inactive lanes pass through bit-unchanged for columns at BOTH
+    trajectory edges and wildly out of range (retired/empty lanes carry
+    junk positions)."""
+    from repro.diffusion.backend import get_backend
+    sched = cosine_schedule(T)
+    smp = make_sampler(T, "ddim", 4, eta=0.3)
+    tables = smp.tables(sched)
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], (6,) + SHAPE)
+    eps = jax.random.normal(ks[1], x.shape)
+    z = jax.random.normal(ks[2], x.shape)
+    cols = jnp.array([0, -5, smp.K - 1, smp.K, 10 ** 6, 2], jnp.int32)
+    active = jnp.array([True, False, True, False, False, True])
+    out = get_backend(backend).masked_index_step(x, cols, eps, z, active,
+                                                 tables)
+    for lane in (1, 3, 4):
+        assert (np.asarray(out[lane]).view(np.uint32) ==
+                np.asarray(x[lane]).view(np.uint32)).all(), f"lane {lane}"
+    # active lanes match the jnp reference
+    ref = get_backend("jnp").masked_index_step(x, cols, eps, z, active,
+                                               tables)
+    for lane in (0, 2, 5):
+        np.testing.assert_allclose(np.asarray(out[lane]),
+                                   np.asarray(ref[lane]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_final_trajectory_step_noise_independent(rng):
+    """Every trajectory's last step targets abar=1 => sigma=0, keep=0: the
+    emitted x_0 must ignore the noise draw entirely (junk-noise contract)."""
+    sched = cosine_schedule(T)
+    for smp in (make_sampler(T), make_sampler(T, "ddim", 5, eta=0.7)):
+        tables = np.asarray(smp.tables(sched))
+        assert tables[2, -1] == 0.0 and tables[3, -1] == 0.0
+        from repro.diffusion.backend import get_backend
+        x = jax.random.normal(rng, (2,) + SHAPE)
+        eps = 0.1 * x
+        cols = jnp.full((2,), smp.K - 1, jnp.int32)
+        b = get_backend("jnp")
+        o1 = b.index_step(x, cols, eps, jnp.zeros_like(x), smp.tables(sched))
+        o2 = b.index_step(x, cols, eps, 100.0 + jnp.zeros_like(x),
+                          smp.tables(sched))
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# split protocol + engine on strided trajectories
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def models():
+    sched = cosine_schedule(T)
+    server = _init_fn(jax.random.PRNGKey(0))
+    stack = adamw.tree_stack(
+        [_init_fn(k) for k in jax.random.split(jax.random.PRNGKey(1), 3)])
+    return sched, server, stack
+
+
+def test_split_sample_strided_disclosed_is_server_segment(models):
+    """Strided split_sample's intermediate is exactly the server segment's
+    output (positions [0, cut)), and the client segment continues from it
+    — the disclosed tensor is still x at the cut."""
+    sched, server, stack = models
+    smp = make_sampler(T, "ddim", 6, eta=0.0)
+    plan = CutPlan(T, 0.5)
+    server_fn = functools.partial(_apply_fn, server)
+    client_fn = functools.partial(_apply_fn, adamw.tree_unstack(stack, 0))
+    key = jax.random.PRNGKey(2)
+    x0, x_mid = collafuse.split_sample(
+        sched, plan, server_fn, client_fn, key, (2,) + SHAPE,
+        return_intermediate=True, sampler=smp)
+    k_init, k_srv, k_cli = jax.random.split(key, 3)
+    x_T = jax.random.normal(k_init, (2,) + SHAPE, jnp.float32)
+    cut = plan.cut_index(smp)
+    mid_ref = sample_trajectory(sched, smp, server_fn, k_srv, x_T, 0, cut)
+    x0_ref = sample_trajectory(sched, smp, client_fn, k_cli, mid_ref, cut,
+                               smp.K)
+    np.testing.assert_array_equal(np.asarray(x_mid), np.asarray(mid_ref))
+    np.testing.assert_array_equal(np.asarray(x0), np.asarray(x0_ref))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_masked"])
+def test_engine_strided_matches_lane_reference(models, backend):
+    """Engine lanes on a strided DDIM trajectory reproduce
+    split_sample_lane with the same sampler, per backend."""
+    sched, server, stack = models
+    samplers = {"ddpm": make_sampler(T),
+                "ddim5": make_sampler(T, "ddim", 5, eta=0.0),
+                "ddim8": make_sampler(T, "ddim", 8, eta=0.6)}
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=4,
+                      samplers=samplers, step_backend=backend)
+    reqs = [Request(req_id=0, key=jax.random.PRNGKey(40), batch=2,
+                    cut_ratio=0.5, client_idx=1, sampler="ddim5"),
+            Request(req_id=1, key=jax.random.PRNGKey(41), batch=1,
+                    cut_ratio=0.25, client_idx=0, sampler="ddpm"),
+            Request(req_id=2, key=jax.random.PRNGKey(42), batch=1,
+                    cut_ratio=0.75, client_idx=2, sampler="ddim8",
+                    arrival_tick=1)]
+    res = eng.serve(list(reqs), stack)
+    assert set(res.completions) == {0, 1, 2}
+    for comp in res.completions.values():
+        r = comp.request
+        plan = CutPlan(T, r.cut_ratio)
+        server_fn = functools.partial(_apply_fn, server)
+        client_fn = functools.partial(
+            _apply_fn, adamw.tree_unstack(stack, r.client_idx))
+        for i in range(r.batch):
+            x0_ref, mid_ref = collafuse.split_sample_lane(
+                sched, plan, server_fn, client_fn,
+                jax.random.fold_in(r.key, i), SHAPE,
+                return_intermediate=True, sampler=samplers[r.sampler])
+            np.testing.assert_allclose(comp.x_mid[i], np.asarray(mid_ref),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"x_mid req={r.req_id} "
+                                               f"lane={i}")
+            np.testing.assert_allclose(comp.x0[i], np.asarray(x0_ref),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"x0 req={r.req_id} lane={i}")
+
+
+def test_engine_strided_retires_in_trajectory_ticks(models):
+    """A DDIM-K request occupies the server for cut_index ticks — not the
+    dense (1-c)*T — and its latency reflects that."""
+    sched, server, _ = models
+    samplers = {"ddpm": make_sampler(T),
+                "ddim4": make_sampler(T, "ddim", 4, eta=0.0)}
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2,
+                      samplers=samplers)
+    req = Request(req_id=0, key=jax.random.PRNGKey(50), cut_ratio=0.5,
+                  sampler="ddim4")
+    cut = eng._cut_of(req)
+    assert cut < CutPlan(T, 0.5).n_server_steps
+    res = eng.run([req])
+    assert res.summary["ticks"] == cut
+    comp = res.completions[0]
+    assert comp.retire_tick - comp.admit_tick == cut
+
+
+def test_engine_rejects_unknown_sampler(models):
+    sched, server, _ = models
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2)
+    bad = Request(req_id=0, key=jax.random.PRNGKey(0), sampler="nope")
+    with pytest.raises(AssertionError, match="sampler"):
+        eng.run([bad])
+
+
+def test_sjf_costs_trajectory_steps_not_dense(models):
+    """Mixed DDPM/DDIM traffic: SJF must admit the strided request first
+    even though its CUT-RATIO looks expensive — its trajectory cost is
+    tiny.  The dense cost model would misorder this pair."""
+    sched, server, stack = models
+    samplers = {"ddpm": make_sampler(T),
+                "ddim4": make_sampler(T, "ddim", 4, eta=0.0)}
+    sch = CutRatioScheduler(T, samplers=samplers)
+    dense_req = Request(req_id=0, key=jax.random.PRNGKey(60),
+                        cut_ratio=0.5)               # dense: 8 server steps
+    ddim_req = Request(req_id=1, key=jax.random.PRNGKey(61),
+                       cut_ratio=0.0, sampler="ddim4")   # whole traj: 4
+    assert sch.server_cost(ddim_req) < sch.server_cost(dense_req)
+    # dense model would have scored them the other way around
+    assert (1.0 - ddim_req.cut_ratio) * T > \
+           (1.0 - dense_req.cut_ratio) * T
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=1,
+                      scheduler=sch, samplers=samplers)
+    res = eng.run([dense_req, ddim_req])
+    assert (res.completions[1].retire_tick <
+            res.completions[0].retire_tick)
+
+
+def test_engine_metrics_account_trajectory_flops(models):
+    """FLOP split uses trajectory step counts: a DDIM-4 request's total
+    model calls are 4, not T."""
+    sched, server, _ = models
+    samplers = {"ddpm": make_sampler(T),
+                "ddim4": make_sampler(T, "ddim", 4, eta=0.0)}
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2,
+                      samplers=samplers, flops_per_call=1.0)
+    req = Request(req_id=0, key=jax.random.PRNGKey(70), cut_ratio=0.5,
+                  sampler="ddim4")
+    res = eng.run([req])
+    total_calls = (res.summary["server_flops"] +
+                   res.summary["client_flops"])
+    n_srv, n_cli = eng._steps_of(req)
+    assert n_srv + n_cli == 4
+    # server_flops = n_srv, client_flops = n_cli + 10 (q_sample pass proxy)
+    assert res.summary["server_flops"] == n_srv
+    assert total_calls == 4 + 10.0
+
+
+def test_finisher_groups_by_client(models):
+    """Grouped finisher: multiple requests per client, uneven group sizes,
+    zero-lane clients — outputs still match the per-lane reference."""
+    sched, server, stack = models
+    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=6)
+    reqs = [Request(req_id=0, key=jax.random.PRNGKey(80), batch=3,
+                    cut_ratio=0.5, client_idx=2),
+            Request(req_id=1, key=jax.random.PRNGKey(81), batch=1,
+                    cut_ratio=0.25, client_idx=2),
+            Request(req_id=2, key=jax.random.PRNGKey(82), batch=1,
+                    cut_ratio=0.75, client_idx=0)]   # client 1 gets nothing
+    res = eng.serve(list(reqs), stack)
+    for comp in res.completions.values():
+        r = comp.request
+        server_fn = functools.partial(_apply_fn, server)
+        client_fn = functools.partial(
+            _apply_fn, adamw.tree_unstack(stack, r.client_idx))
+        for i in range(r.batch):
+            x0_ref = collafuse.split_sample_lane(
+                sched, CutPlan(T, r.cut_ratio), server_fn, client_fn,
+                jax.random.fold_in(r.key, i), SHAPE)
+            np.testing.assert_allclose(comp.x0[i], np.asarray(x0_ref),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# coefficient identity (non-hypothesis spot checks; property version in
+# tests/test_properties.py)
+# ---------------------------------------------------------------------------
+def test_ddim_eta1_dense_coefs_equal_ancestral():
+    sched = cosine_schedule(T)
+    t = jnp.arange(T, 0, -1, dtype=jnp.int32)
+    gen = np.asarray(ddim_pair_coefs(sched, t, t - 1, eta=1.0))
+    anc = np.asarray(ancestral_pair_coefs(sched, t))
+    np.testing.assert_allclose(gen, anc, rtol=1e-4, atol=1e-6)
+
+
+def test_ddim_eta0_is_deterministic():
+    sched = cosine_schedule(T)
+    smp = make_sampler(T, "ddim", 6, eta=0.0)
+    tables = np.asarray(smp.tables(sched))
+    assert (tables[2] == 0.0).all() and (tables[3] == 0.0).all()
