@@ -132,6 +132,26 @@ def ddim_table(rec):
           f"equivalence: {rec['equivalence']}")
 
 
+def privacy_table(rec):
+    adm = rec.get("admission", {})
+    dk = adm.get("disclosure_kid", {})
+    print(f"KID-gated admission on mixed DDPM/DDIM traffic — "
+          f"{rec['n_requests']} requests (c∈{rec['cut_ratios']}) on "
+          f"{rec['slots']} slots, T={rec['T']}, K={rec['K']}, "
+          f"calib={rec['calib']}, min_kid={rec['min_kid']:.5f}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| admitted | bumped | rejected | served KID min | served KID "
+          "mean | ticks gated | ticks ungated | ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    print(f"| {adm.get('admitted', 0)} | {adm.get('bumped', 0)} "
+          f"| {adm.get('rejected', 0)} | {dk.get('min', 0):.5f} "
+          f"| {dk.get('mean', 0):.5f} | {rec['ticks_gated']} "
+          f"| {rec['ticks_ungated']} | {rec['ticks_ratio']:.3f}x |")
+    print(f"\ngates: every served disclosure KID >= min_kid; tick ratio "
+          f"<= 1.5 (bumps only shorten the server segment); "
+          f"{rec['equivalence']}")
+
+
 def masked_step_table(rec):
     print(f"fused masked denoise-tick kernel vs jnp masked chain — "
           f"{rec['slots']} lanes, {rec['image']}x{rec['image']}x1, "
@@ -190,6 +210,10 @@ def main():
     if ddim:
         print("\n## §Strided DDIM serving (sampler layer)\n")
         ddim_table(ddim)
+    priv = _load_bench("privacy")
+    if priv:
+        print("\n## §KID-gated admission (privacy-aware serving)\n")
+        privacy_table(priv)
     masked = _load_bench("masked_step")
     if masked:
         print("\n## §Fused masked denoise tick (StepBackend pallas_masked)\n")

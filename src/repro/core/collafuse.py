@@ -273,6 +273,26 @@ def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
                            backend)
 
 
+def disclosed_at_pos(sched: DiffusionSchedule, sampler: Sampler,
+                     server_fn: Callable, key, x0_client, pos: int,
+                     backend: BackendLike = None):
+    """:func:`disclosed_at_split` generalised to an ARBITRARY trajectory
+    position: noise the client's x_0 to x_T, denoise positions [0, pos)
+    on the server.  Same key discipline as :func:`disclosed_at_split`, so
+    ``pos == plan.cut_index(sampler)`` reproduces it exactly (asserted in
+    tests/test_admission.py).  The KID-gated admission policy scores
+    CANDIDATE cut positions with this — the nominal cut plus each
+    next-noisier bump target (``repro.serve.admission``)."""
+    assert 0 <= pos <= sampler.K, (pos, sampler.K)
+    k_n, k_s = jax.random.split(key)
+    b = x0_client.shape[0]
+    t_top = jnp.full((b,), sched.T, jnp.int32)
+    eps = jax.random.normal(k_n, x0_client.shape, x0_client.dtype)
+    x_T = ddpm.q_sample(sched, x0_client, t_top, eps)
+    return sample_trajectory(sched, sampler, server_fn, k_s, x_T, 0, pos,
+                             backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # Compute split accounting (paper H2c — GPU energy proxy)
 # ---------------------------------------------------------------------------

@@ -69,15 +69,32 @@ def _poly_kernel(x, y):
     return (x @ y.T / d + 1.0) ** 3
 
 
-def kid_from_features(fx, fy):
-    """Unbiased MMD² estimator (Binkowski et al. 2018, eq. 3)."""
+def kid_from_features(fx, fy, *, small_batch: str = "error"):
+    """Unbiased MMD² estimator (Binkowski et al. 2018, eq. 3).
+
+    The unbiased estimator divides by ``m·(m-1)`` / ``n·(n-1)``, which is
+    0 for a single-image batch — NaN/inf, not a score.  Callers hitting
+    that (e.g. an admission gate handed a 1-image calibration batch) get a
+    loud assert by default; ``small_batch="biased"`` selects the documented
+    fallback — the BIASED V-statistic (diagonal kept, divide by m²/n²) —
+    which is defined down to a single image at the cost of a positive bias
+    of order 1/m.  Comparisons across cut positions (all this repo's
+    claims) survive the bias; absolute KID levels do not, so the fallback
+    is opt-in rather than silent.
+    """
     m, n = fx.shape[0], fy.shape[0]
     kxx = _poly_kernel(fx, fx)
     kyy = _poly_kernel(fy, fy)
     kxy = _poly_kernel(fx, fy)
+    sum_kxy = kxy.mean()
+    if m < 2 or n < 2:
+        assert small_batch == "biased", \
+            f"unbiased KID needs >= 2 images per batch (got m={m}, n={n}): " \
+            f"the m*(m-1)/n*(n-1) denominators are 0 — pass a larger batch " \
+            f"or small_batch='biased' for the V-statistic fallback"
+        return kxx.mean() + kyy.mean() - 2 * sum_kxy
     sum_kxx = (kxx.sum() - jnp.trace(kxx)) / (m * (m - 1))
     sum_kyy = (kyy.sum() - jnp.trace(kyy)) / (n * (n - 1))
-    sum_kxy = kxy.mean()
     return sum_kxx + sum_kyy - 2 * sum_kxy
 
 

@@ -197,6 +197,26 @@ def default_samplers(T: int):
     return {DEFAULT: make_sampler(T)}
 
 
+def assert_same_menu(a, b, a_name: str = "menu A", b_name: str = "menu B"):
+    """Assert two {name: Sampler} menus are identical.
+
+    Components that price or gate requests by trajectory (the SJF
+    scheduler, the KID admission policy) must agree with the engine that
+    executes them: a scheduler scoring a DIFFERENT menu silently falls
+    back to the dense (1-c)·T cost for names it doesn't know and misorders
+    mixed traffic, and an admission policy calibrated against one
+    trajectory must not gate another.  Sampler/Trajectory are frozen value
+    dataclasses, so equality here is structural.
+    """
+    assert set(a) == set(b), \
+        f"sampler menus diverge: {a_name} has {sorted(a)}, " \
+        f"{b_name} has {sorted(b)}"
+    for name in a:
+        assert a[name] == b[name], \
+            f"sampler {name!r} differs between {a_name} " \
+            f"({a[name].describe()}) and {b_name} ({b[name].describe()})"
+
+
 # ---------------------------------------------------------------------------
 # trajectory-indexed sampling loop (generalises ddpm.sample_range)
 # ---------------------------------------------------------------------------

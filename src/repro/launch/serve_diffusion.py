@@ -46,6 +46,15 @@ def _parse_args(argv=None):
     ap.add_argument("--eta", type=float, default=0.0,
                     help="DDIM stochasticity in [0,1]; 1 on the dense "
                          "trajectory is the DDPM ancestral step")
+    ap.add_argument("--min-kid", type=float, default=None,
+                    help="KID-gated admission floor: score each request's "
+                         "disclosure on a calibration batch before it takes "
+                         "a slot; below-floor requests are bumped to a "
+                         "noisier cut or rejected.  Default None = gate off "
+                         "(the pre-gate engine path, bitwise)")
+    ap.add_argument("--calib", type=int, default=16,
+                    help="calibration batch size for the admission gate "
+                         "(synthetic client images; needs >= 2)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="0 = all at tick 0; k = one request every k ticks")
     ap.add_argument("--devices", type=int, default=0,
@@ -89,7 +98,8 @@ def main(argv=None):
     print(f"serve_diffusion: mesh=data:{d}xmodel:{m} slots={args.slots} "
           f"requests={args.requests} T={args.T} policy={args.policy} "
           f"backend={args.step_backend} "
-          f"sampler={samplers[args.sampler].describe()}")
+          f"sampler={samplers[args.sampler].describe()} "
+          f"min_kid={args.min_kid}")
 
     ucfg = dataclasses.replace(
         UNetConfig().reduced(), image_size=args.image, base_channels=8,
@@ -120,11 +130,23 @@ def main(argv=None):
             for i in range(args.requests)
         ]
 
+        admission = None
+        if args.min_kid is not None:
+            from repro.data.synthetic import (ClientDataConfig,
+                                              make_client_datasets)
+            from repro.serve import AdmissionPolicy
+            calib_sets, _ = make_client_datasets(ClientDataConfig(
+                n_clients=1, per_client=args.calib, image_size=args.image,
+                holdout=2, seed=args.seed))
+            admission = AdmissionPolicy(sched, calib_sets[0],
+                                        min_kid=args.min_kid,
+                                        samplers=samplers)
         eng = ServeEngine(
             sched, apply_fn, server_params, (args.image, args.image, 1),
             slots=args.slots,
             scheduler=make_scheduler(args.policy, args.T, samplers=samplers),
-            step_backend=args.step_backend, mesh=mesh, samplers=samplers)
+            step_backend=args.step_backend, mesh=mesh, samplers=samplers,
+            admission=admission)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
         res = eng.serve(list(requests), client_stack)      # warm jit cache
@@ -135,6 +157,16 @@ def main(argv=None):
               f"p50/p95 latency {s['latency_ticks_p50']:.0f}/"
               f"{s['latency_ticks_p95']:.0f} ticks | "
               f"util {s['utilization_mean']:.2f}", flush=True)
+        if admission is not None:
+            a = s["admission"]
+            dk = a.get("disclosure_kid", {})
+            print(f"admission (min_kid={args.min_kid}): "
+                  f"{a['admitted']} admitted, {a['bumped']} bumped, "
+                  f"{a['rejected']} rejected | served disclosure KID "
+                  f"min/mean {dk.get('min', 0):.4f}/{dk.get('mean', 0):.4f}",
+                  flush=True)
+            for d in res.rejected.values():
+                print(f"  rejected req {d.req_id}: {d.describe()}")
         for comp in res.completions.values():
             assert comp.x0 is not None and bool(
                 jax.numpy.isfinite(jax.numpy.asarray(comp.x0)).all()), \

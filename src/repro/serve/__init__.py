@@ -3,17 +3,24 @@
 ``engine``    — slot-array engine: one jitted masked denoise step per tick
                 across all in-flight requests, retire-at-t_split, vmapped
                 client-segment finisher.
-``scheduler`` — admission policies (FIFO, cut-ratio-aware SJF with aging).
-``metrics``   — per-request latency, tick utilization, FLOP-split summary.
+``scheduler`` — admission policies (FIFO, cut-ratio-aware SJF with aging),
+                both gated by an optional AdmissionPolicy at ``select``.
+``admission`` — KID-gated admission: disclosure scored per (sampler, cut)
+                before a request occupies a slot; below-floor requests are
+                bumped to a noisier cut or rejected.
+``metrics``   — per-request latency, tick utilization, FLOP-split summary,
+                admission decision counts + disclosure-KID histogram.
 """
+from repro.serve.admission import AdmissionDecision, AdmissionPolicy
 from repro.serve.engine import (Completion, ServeEngine, ServeResult,
                                 serve_sequential)
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, admission_summary
 from repro.serve.scheduler import (CutRatioScheduler, FIFOScheduler, Request,
                                    make_scheduler)
 
 __all__ = [
-    "Completion", "CutRatioScheduler", "FIFOScheduler", "Request",
-    "ServeEngine", "ServeMetrics", "ServeResult", "make_scheduler",
+    "AdmissionDecision", "AdmissionPolicy", "Completion",
+    "CutRatioScheduler", "FIFOScheduler", "Request", "ServeEngine",
+    "ServeMetrics", "ServeResult", "admission_summary", "make_scheduler",
     "serve_sequential",
 ]

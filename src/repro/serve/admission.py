@@ -1,0 +1,270 @@
+"""KID-gated admission: score a request's disclosure BEFORE it takes a slot.
+
+CollaFuse's privacy claim (paper H2b) is that the disclosed tensor — x at
+the cut, the one tensor that crosses from server to client in protocol
+step 5 — conceals client data.  The serving engine admits requests at ANY
+cut-ratio, so without a gate a c→0 request walks the server segment almost
+to x_0 and the engine emits nearly-clean images: exactly the leakage
+split/federated generative pipelines exist to prevent.  This module turns
+the repo's offline disclosure metrics (``repro.core.privacy``) into an
+ONLINE admission guarantee:
+
+* :class:`AdmissionPolicy` scores the disclosure KID of every would-be
+  (sampler, cut position) — run :func:`repro.core.collafuse.disclosed_at_pos`
+  on a small CALIBRATION batch of real-data stand-ins, extract features,
+  and compare against the calibration batch itself.  HIGH KID = disclosed
+  far from real data = concealed; LOW KID = leaky.
+* A request whose score clears the ``min_kid`` floor is ADMITTED at its
+  nominal cut.  One below the floor is BUMPED to the next-NOISIER
+  trajectory position (fewer server steps ⇒ disclosed earlier in the
+  chain) until a position clears — the KID-aware cut mapping: adjacent
+  strided timesteps can be hundreds of t apart at low K, so
+  ``Trajectory.cut_pos``'s nearest-t_split rule alone is NOT privacy-safe
+  even though its ties break noisier.  If no position on the trajectory
+  clears, the request is REJECTED with a typed :class:`AdmissionDecision`.
+* Scores are jitted and cached per (sampler, position) and decisions per
+  (sampler, cut_ratio), so gating costs O(menu × cuts) model work — not
+  O(requests) — regardless of traffic volume.
+
+Placement: the scheduler consults the policy at ``select`` (a rejected
+request is dropped from the queue before it can occupy a slot), the engine
+consults the SAME cached policy for each request's EFFECTIVE cut (slot
+``end`` counters, SJF costs, FLOP accounting) and surfaces every decision
+in ``ServeResult.decisions`` / ``ServeMetrics`` (bumped/rejected counts +
+disclosure-KID histogram).  With no policy configured the engine runs the
+pre-gate path bitwise unchanged (gated in ``benchmarks.run --only
+privacy_admission``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collafuse, privacy
+from repro.core.collafuse import CutPlan
+from repro.diffusion.backend import BackendLike
+from repro.diffusion.sampler import Sampler, assert_same_menu
+from repro.diffusion.schedule import DiffusionSchedule
+
+ADMIT, BUMP, REJECT = "admit", "bump", "reject"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """The typed outcome of gating one request.
+
+    ``effective_cut`` is the trajectory position the request is actually
+    served at: equal to ``nominal_cut`` for plain admits, strictly smaller
+    (noisier disclosure, fewer server steps) for bumps, and -1 for rejects
+    (no position on the trajectory cleared the floor).  ``kid`` is the
+    disclosure KID at the effective cut — for rejects, the best (highest)
+    score found while scanning, i.e. how far short the trajectory fell.
+    """
+
+    req_id: int
+    sampler: str
+    cut_ratio: float
+    nominal_cut: int
+    effective_cut: int
+    kid: float
+    min_kid: float
+    action: str                      # "admit" | "bump" | "reject"
+
+    @property
+    def served(self) -> bool:
+        return self.action != REJECT
+
+    @property
+    def bumped(self) -> bool:
+        return self.action == BUMP
+
+    def describe(self) -> str:
+        if self.action == REJECT:
+            return (f"reject {self.sampler!r} c={self.cut_ratio:.2f}: best "
+                    f"disclosure KID {self.kid:.4f} < floor {self.min_kid:.4f}")
+        tag = (f"bump cut {self.nominal_cut}→{self.effective_cut}"
+               if self.bumped else f"admit at cut {self.nominal_cut}")
+        return (f"{tag} ({self.sampler!r} c={self.cut_ratio:.2f}, "
+                f"KID {self.kid:.4f} ≥ {self.min_kid:.4f})")
+
+
+class AdmissionPolicy:
+    """Privacy gate for the serving engine: disclosure-KID floor + bump.
+
+    ``calib`` is a small batch of real-data stand-ins (N ≥ 2 — the
+    unbiased KID estimator is undefined below that; synthetic client
+    images in the launchers/benchmarks).  ``min_kid`` is the floor every
+    SERVED request's disclosure KID must clear.  ``samplers`` and
+    ``server_fn`` may be left unset and late-bound by the engine at
+    construction (:meth:`bind`); a policy built against one menu refuses
+    to gate an engine serving another.
+
+    Scoring follows the serving path's semantics exactly: the disclosed
+    tensor at position p is :func:`collafuse.disclosed_at_pos` (noise the
+    calibration images to x_T, denoise positions [0, p) under the
+    request's sampler), compared by ``privacy.kid`` features against the
+    calibration batch.  One fixed key per policy keeps every score — and
+    therefore every decision — deterministic across runs and processes.
+    """
+
+    def __init__(self, sched: DiffusionSchedule, calib, *,
+                 min_kid: float = 0.0,
+                 samplers: Optional[Dict[str, Sampler]] = None,
+                 server_fn=None, feat_params=None, key=None,
+                 backend: BackendLike = None):
+        self.sched = sched
+        self.calib = jnp.asarray(calib, jnp.float32)
+        assert self.calib.ndim == 4, \
+            f"calibration batch must be (N,H,W,C), got {self.calib.shape}"
+        assert self.calib.shape[0] >= 2, \
+            f"calibration batch of {self.calib.shape[0]} image(s): the " \
+            f"unbiased KID estimator needs >= 2 (privacy.kid_from_features)"
+        self.min_kid = float(min_kid)
+        self.samplers = dict(samplers) if samplers is not None else None
+        self.server_fn = server_fn
+        self.feat_params = (feat_params if feat_params is not None else
+                            privacy.feature_params(in_ch=self.calib.shape[-1]))
+        self.key = key if key is not None else jax.random.PRNGKey(4242)
+        self.backend = backend
+        self._calib_feats = None                 # lazy, computed once
+        self._kid_fn = None                      # jitted, built at first use
+        self._kid_cache: Dict[tuple, float] = {}
+        self._decision_cache: Dict[tuple, AdmissionDecision] = {}
+
+    # ------------------------------------------------------------------
+    def bind(self, *, server_fn=None, samplers=None) -> None:
+        """Late-bind the pieces the engine owns.  Called by
+        ``ServeEngine.__init__``; no-ops for pieces already set, except
+        that pre-set pieces must AGREE with the engine's: a policy whose
+        cached scores were computed against different trajectories — or a
+        different SERVER MODEL — must never gate them (its floor guarantee
+        would be silently void for the tensors actually emitted)."""
+        if server_fn is not None:
+            if self.server_fn is None:
+                self.server_fn = server_fn
+            else:
+                # callables can't be compared structurally: spot-check the
+                # two server models on a calibration image at the noisiest
+                # timestep (one tiny model call, once per engine build)
+                t = jnp.full((1,), self.sched.T, jnp.int32)
+                x = self.calib[:1]
+                assert bool(jnp.allclose(self.server_fn(x, t),
+                                         server_fn(x, t),
+                                         rtol=1e-5, atol=1e-6)), \
+                    "admission policy's server_fn disagrees with the " \
+                    "engine's server model: disclosure scores calibrated " \
+                    "under one set of weights must not gate another " \
+                    "(rebuild the policy against this engine's model)"
+        if samplers is not None:
+            if self.samplers is None:
+                self.samplers = dict(samplers)
+            else:
+                assert_same_menu(self.samplers, samplers,
+                                 "admission policy", "engine")
+
+    def with_min_kid(self, min_kid: float) -> "AdmissionPolicy":
+        """A policy at a different floor SHARING this one's score cache
+        (disclosure KIDs are floor-independent; only decisions re-derive).
+        The min-kid sweeps in ``examples/privacy_admission_sweep.py`` and
+        the benchmark pay the O(menu × cuts) scoring once this way."""
+        p = AdmissionPolicy(self.sched, self.calib, min_kid=min_kid,
+                            samplers=self.samplers, server_fn=self.server_fn,
+                            feat_params=self.feat_params, key=self.key,
+                            backend=self.backend)
+        p._calib_feats = self._calib_feats
+        p._kid_fn = self._kid_fn
+        p._kid_cache = self._kid_cache           # shared, floor-independent
+        return p
+
+    # ------------------------------------------------------------------
+    # scoring (jitted + cached per (sampler, position))
+    # ------------------------------------------------------------------
+    def _score_fn(self):
+        if self._kid_fn is None:
+            assert self.server_fn is not None, \
+                "AdmissionPolicy.server_fn unbound — pass server_fn= or " \
+                "hand the policy to ServeEngine(admission=...), which binds " \
+                "its own server model"
+
+            def _kid(calib, calib_feats, key, sampler, pos):
+                disclosed = collafuse.disclosed_at_pos(
+                    self.sched, sampler, self.server_fn, key, calib, pos,
+                    backend=self.backend)
+                feats = privacy.extract_features(self.feat_params, disclosed)
+                return privacy.kid_from_features(calib_feats, feats)
+
+            self._kid_fn = jax.jit(_kid, static_argnames=("sampler", "pos"))
+        return self._kid_fn
+
+    def disclosure_kid(self, sampler_name: str, pos: int) -> float:
+        """Disclosure KID of x at trajectory position ``pos`` under
+        ``sampler_name``, on the calibration batch (cached; one jitted
+        program per (sampler, position) ever runs)."""
+        ck = (sampler_name, int(pos))
+        if ck not in self._kid_cache:
+            assert self.samplers is not None and sampler_name in self.samplers, \
+                f"unknown sampler {sampler_name!r}; policy menu: " \
+                f"{sorted(self.samplers or {})}"
+            smp = self.samplers[sampler_name]
+            assert 0 <= pos <= smp.K, (pos, smp.K)
+            if self._calib_feats is None:
+                self._calib_feats = privacy.extract_features(
+                    self.feat_params, self.calib)
+            self._kid_cache[ck] = float(self._score_fn()(
+                self.calib, self._calib_feats, self.key, smp, int(pos)))
+        return self._kid_cache[ck]
+
+    def profile(self, sampler_name: str,
+                max_pos: Optional[int] = None) -> List[float]:
+        """Disclosure KID at every trajectory position 0..max_pos (default
+        K) — the landscape the gate scans; benchmarks/examples render it."""
+        smp = self.samplers[sampler_name]
+        hi = smp.K if max_pos is None else max_pos
+        return [self.disclosure_kid(sampler_name, p) for p in range(hi + 1)]
+
+    # ------------------------------------------------------------------
+    # decisions (cached per (sampler, cut_ratio))
+    # ------------------------------------------------------------------
+    def decide(self, req) -> AdmissionDecision:
+        """Gate one :class:`repro.serve.Request`.  Deterministic and cached
+        per (sampler, cut_ratio) — the scheduler's select gate and the
+        engine's effective-cut lookups all land on the same decision."""
+        base = self._decide(req.sampler, req.cut_ratio)
+        return dataclasses.replace(base, req_id=req.req_id)
+
+    def _decide(self, name: str, cut_ratio: float) -> AdmissionDecision:
+        ck = (name, float(cut_ratio))
+        if ck in self._decision_cache:
+            return self._decision_cache[ck]
+        assert self.samplers is not None and name in self.samplers, \
+            f"unknown sampler {name!r}; policy menu: {sorted(self.samplers or {})}"
+        smp = self.samplers[name]
+        nominal = CutPlan(self.sched.T, cut_ratio).cut_index(smp)
+        mk = functools.partial(
+            AdmissionDecision, req_id=-1, sampler=name,
+            cut_ratio=float(cut_ratio), nominal_cut=nominal,
+            min_kid=self.min_kid)
+        best = float("-inf")
+        d = None
+        # scan toward NOISIER disclosure: position p serves positions
+        # [0, p), so smaller p discloses x earlier in the chain
+        for pos in range(nominal, -1, -1):
+            k = self.disclosure_kid(name, pos)
+            best = max(best, k)
+            if k >= self.min_kid:
+                d = mk(effective_cut=pos, kid=k,
+                       action=ADMIT if pos == nominal else BUMP)
+                break
+        if d is None:
+            d = mk(effective_cut=-1, kid=best, action=REJECT)
+        self._decision_cache[ck] = d
+        return d
+
+    def describe(self) -> str:
+        menu = sorted(self.samplers) if self.samplers else "<unbound>"
+        return (f"AdmissionPolicy(min_kid={self.min_kid:g}, "
+                f"calib={self.calib.shape[0]} imgs, menu={menu})")

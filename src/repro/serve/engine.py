@@ -60,8 +60,9 @@ import numpy as np
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
 from repro.diffusion.backend import BackendLike, get_backend
-from repro.diffusion.sampler import Sampler, default_samplers
+from repro.diffusion.sampler import Sampler, assert_same_menu, default_samplers
 from repro.diffusion.schedule import DiffusionSchedule
+from repro.serve.admission import AdmissionDecision, AdmissionPolicy
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import CutRatioScheduler, FIFOScheduler, Request
 
@@ -75,7 +76,7 @@ class Completion:
     x_mid: np.ndarray                  # [batch, H, W, C] at the cut
     admit_tick: int
     retire_tick: int
-    k_cli: np.ndarray = None           # [batch, 2] client-segment keys
+    k_cli: Optional[np.ndarray] = None  # [batch, 2] client-segment keys
     x0: Optional[np.ndarray] = None    # filled by finish_clients
 
 
@@ -84,6 +85,14 @@ class ServeResult:
     completions: Dict[int, Completion]
     summary: Dict
     wall_s: float
+    # one AdmissionDecision per request when a KID gate is configured
+    # (empty ungated); rejected requests appear HERE and not in completions
+    decisions: Dict[int, AdmissionDecision] = \
+        dataclasses.field(default_factory=dict)
+
+    @property
+    def rejected(self) -> Dict[int, AdmissionDecision]:
+        return {rid: d for rid, d in self.decisions.items() if not d.served}
 
 
 class ServeEngine:
@@ -109,7 +118,17 @@ class ServeEngine:
     concatenated column-wise once here; per-lane columns select into the
     concatenation, so mixed-sampler traffic shares one tick program.  A
     :class:`CutRatioScheduler` supplied without a sampler menu inherits
-    this one, so its SJF cost model counts trajectory steps.
+    this one, so its SJF cost model counts trajectory steps (one supplied
+    WITH a menu must agree with the engine's — asserted here).
+
+    ``admission`` is an optional :class:`repro.serve.admission.\
+AdmissionPolicy` — the KID gate: each request's disclosure is scored
+    before it occupies a slot, below-floor requests are bumped to a
+    noisier cut or rejected, and every decision is surfaced in
+    ``ServeResult.decisions`` and the metrics summary.  The engine binds
+    its server model + sampler menu into the policy and shares it with
+    the scheduler (whose ``select`` formally drops rejected requests).
+    ``admission=None`` (default) is the pre-gate path, bitwise unchanged.
     """
 
     def __init__(self, sched: DiffusionSchedule, apply_fn: Callable,
@@ -117,6 +136,7 @@ class ServeEngine:
                  scheduler=None, clip: float = 3.0,
                  step_backend: BackendLike = None, mesh=None,
                  samplers: Optional[Dict[str, Sampler]] = None,
+                 admission: Optional[AdmissionPolicy] = None,
                  flops_per_call: Optional[float] = None):
         self.sched = sched
         self.apply_fn = apply_fn
@@ -133,9 +153,33 @@ class ServeEngine:
             assert s.trajectory.T == sched.T, \
                 f"sampler {name!r} built for T={s.trajectory.T}, " \
                 f"engine schedule has T={sched.T}"
-        if isinstance(self.scheduler, CutRatioScheduler) \
-                and self.scheduler.samplers is None:
-            self.scheduler.samplers = self.samplers
+        if isinstance(self.scheduler, CutRatioScheduler):
+            if self.scheduler.samplers is None:
+                self.scheduler.samplers = self.samplers
+            else:
+                # a scheduler scoring a DIFFERENT menu would silently fall
+                # back to the dense (1-c)·T cost for names it doesn't know
+                # and misorder SJF — fail here, at construction
+                assert_same_menu(self.scheduler.samplers, self.samplers,
+                                 "scheduler", "engine")
+        # ---- KID-gated admission (repro.serve.admission) ----------------
+        # engine and scheduler must share ONE policy: the scheduler gates
+        # at select, the engine derives slot `end` counters / FLOPs from
+        # the same cached decisions
+        if admission is None:
+            admission = getattr(self.scheduler, "admission", None)
+        self.admission = admission
+        if admission is not None:
+            assert admission.sched.T == sched.T, \
+                f"admission policy calibrated for T={admission.sched.T}, " \
+                f"engine schedule has T={sched.T}"
+            admission.bind(
+                server_fn=functools.partial(apply_fn, server_params),
+                samplers=self.samplers)
+            if self.scheduler.admission is None:
+                self.scheduler.admission = admission
+            assert self.scheduler.admission is admission, \
+                "engine and scheduler must share one AdmissionPolicy"
         # hoisted out of the tick: every registered trajectory's (4, K)
         # coefficient table concatenated column-wise (gathered per-lane in
         # SMEM by the fused kernel), plus the per-trajectory column offset,
@@ -266,16 +310,31 @@ class ServeEngine:
             f"menu: {sorted(self.samplers)}"
         return self.samplers[req.sampler]
 
-    def _cut_of(self, req: Request) -> int:
+    def _decision(self, req: Request) -> Optional[AdmissionDecision]:
+        """The (cached) admission decision for a request; None ungated."""
+        return self.admission.decide(req) if self.admission is not None \
+            else None
+
+    def _effective_cut(self, req: Request) -> int:
         """Trajectory position the request's lanes retire at (= server
-        model calls it costs)."""
+        model calls it costs).  Under a KID gate this is the admission
+        decision's EFFECTIVE cut — nominal for plain admits, noisier
+        (smaller) for bumped requests; ungated it is the nominal CutPlan
+        cut, bitwise the pre-gate behaviour."""
+        d = self._decision(req)
+        if d is not None:
+            assert d.served, \
+                f"request {req.req_id} was rejected at admission " \
+                f"({d.describe()}) — it has no serving cut"
+            return d.effective_cut
         return CutPlan(self.sched.T, req.cut_ratio).cut_index(
             self._sampler_of(req))
 
     def _steps_of(self, req: Request):
         """(server, client) model-call split on the request's trajectory —
-        the metrics' FLOP accounting."""
-        cut = self._cut_of(req)
+        the metrics' FLOP accounting.  Bumped requests shift steps from
+        the server to the client (the cut moved noisier)."""
+        cut = self._effective_cut(req)
         return cut, self._sampler_of(req).K - cut
 
     def _admit(self, state, req: Request, lanes: List[int], now: int,
@@ -289,7 +348,7 @@ class ServeEngine:
         state = {
             "x": state["x"].at[idx].set(x_T),
             "pos": state["pos"].at[idx].set(0),
-            "end": state["end"].at[idx].set(self._cut_of(req)),
+            "end": state["end"].at[idx].set(self._effective_cut(req)),
             "traj": state["traj"].at[idx].set(self._traj_ids[req.sampler]),
             "key": state["key"].at[idx].set(k_srv),
             "active": state["active"].at[idx].set(True),
@@ -308,23 +367,42 @@ class ServeEngine:
             max_ticks: Optional[int] = None) -> ServeResult:
         """Serve the SERVER segment of every request: admit from the queue,
         tick until drained, retire x at the cut per request.  Completions
-        carry ``x_mid`` only; :meth:`serve` adds the client finish."""
+        carry ``x_mid`` only; :meth:`serve` adds the client finish.
+
+        Under a KID gate every request gets an :class:`AdmissionDecision`
+        (surfaced in ``ServeResult.decisions``): to-be-rejected requests
+        still enter the queue and are formally dropped by the scheduler's
+        select gate — they never occupy a slot and have no completion."""
         assert len({r.req_id for r in requests}) == len(requests), \
             "duplicate req_ids: completions/inflight are keyed by req_id"
+        decisions: Dict[int, AdmissionDecision] = {}
         for r in requests:
             assert r.batch <= self.slots, \
                 f"request {r.req_id} batch {r.batch} > capacity {self.slots}"
             self._sampler_of(r)                    # fail fast on bad names
-        # zero-server-step requests (cut position 0, e.g. c=1) complete at
-        # arrival (x_mid = x_T) without ever occupying a slot
-        local_only = sorted((r for r in requests if self._cut_of(r) == 0),
-                            key=lambda r: r.arrival_tick)
+            d = self._decision(r)                  # cached; gate once here
+            if d is not None:
+                decisions[r.req_id] = d
+
+        def _served(r):
+            return r.req_id not in decisions or decisions[r.req_id].served
+
+        # zero-server-step requests (cut position 0, e.g. c=1 — or bumped
+        # all the way to full concealment) complete at arrival (x_mid =
+        # x_T) without ever occupying a slot
+        local_only = sorted(
+            (r for r in requests
+             if _served(r) and self._effective_cut(r) == 0),
+            key=lambda r: r.arrival_tick)
         for r in requests:
-            if self._cut_of(r) > 0:
+            if not _served(r):
+                self.scheduler.add(r)   # dropped at the select gate below
+            elif self._effective_cut(r) > 0:
                 self.scheduler.add(r)
         if max_ticks is None:
             span = max((r.arrival_tick for r in requests), default=0)
-            total = sum(self._cut_of(r) for r in requests)
+            total = sum(self._effective_cut(r) for r in requests
+                        if _served(r))
             max_ticks = span + total + self._kmax + 16   # liveness bound
 
         state = self._init_state()
@@ -397,10 +475,19 @@ class ServeEngine:
                     "starvation?")
 
         wall = time.perf_counter() - t0
+        # every to-be-rejected request must have been dropped by the
+        # scheduler's select gate (the queue drained, so each was either
+        # admitted or dropped) — cross-check the two gate sites agree
+        dropped = {d.req_id for d in self.scheduler.take_rejections()}
+        assert dropped == {rid for rid, d in decisions.items()
+                           if not d.served}, \
+            f"select-gate rejections {sorted(dropped)} disagree with " \
+            f"admission decisions"
         summary = metrics.summary(wall, self.sched.T, self.flops_per_call,
-                                  requests, steps_of=self._steps_of)
+                                  requests, steps_of=self._steps_of,
+                                  decisions=decisions or None)
         return ServeResult(completions=completions, summary=summary,
-                           wall_s=wall)
+                           wall_s=wall, decisions=decisions)
 
     # ------------------------------------------------------------------
     def finish_clients(self, result: ServeResult, client_stack) -> None:
@@ -423,7 +510,7 @@ class ServeEngine:
             assert 0 <= r.client_idx < n_clients, \
                 f"request {r.req_id} names client {r.client_idx}; stack " \
                 f"holds {n_clients}"
-            cut = self._cut_of(r)
+            cut = self._effective_cut(r)
             K = self._sampler_of(r).K
             tid = self._traj_ids[r.sampler]
             for i in range(r.batch):
@@ -435,7 +522,15 @@ class ServeEngine:
         groups = [by_client[ci] for ci in present]
         stack_used = jax.tree.map(lambda a: a[jnp.asarray(present)],
                                   client_stack)
+        # width is padded UP to the next power of two: the widest group
+        # tracks the traffic mix, and an exact width would hand
+        # ``self._finish`` a fresh (n_present, width) shape almost every
+        # call — a jit recompile per request batch.  Pow-2 buckets bound
+        # the cache at O(log slots) entries per n_present; padding lanes
+        # ride the loop masked (valid=False), so per-lane outputs are
+        # unchanged (cache growth asserted in tests/test_admission.py).
         width = max(len(g) for g in groups)
+        width = 1 << (width - 1).bit_length()
         shp = (len(present), width)
         x = np.zeros(shp + self.image_shape, np.float32)
         pos = np.zeros(shp, np.int32)
@@ -473,7 +568,7 @@ class ServeEngine:
             result.wall_s += finish_s
             s = result.summary
             s["finish_s"] = finish_s
-            s["requests_per_s"] = s["requests"] / max(result.wall_s, 1e-9)
+            s["requests_per_s"] = s["served"] / max(result.wall_s, 1e-9)
             s["images_per_s"] = s["images"] / max(result.wall_s, 1e-9)
         return result
 
@@ -505,8 +600,6 @@ def serve_sequential(sched: DiffusionSchedule, requests: List[Request],
 def sequential_fns(apply_fn, server_params, client_stack):
     """(server_fn, client_fn_for) partials over a stacked client tree —
     the model plumbing both callers of :func:`serve_sequential` need."""
-    import functools
-
     from repro.optim import adamw
     server_fn = functools.partial(apply_fn, server_params)
     client_fn_for = lambda ci: functools.partial(

@@ -5,7 +5,10 @@ sample per tick; :meth:`ServeMetrics.summary` folds them into the record
 written to ``results/BENCH_serve.json`` (requests/s, p50/p95 latency,
 mean slot utilization, and the server/client FLOP accounting via
 :func:`repro.core.collafuse.flops_split` — the paper's H2c energy proxy
-applied to inference traffic).
+applied to inference traffic).  Under a KID admission gate the summary
+grows an ``admission`` section (:func:`admission_summary`): action counts
+and the served disclosure-KID histogram, with rejected requests excluded
+from the FLOP accounting (they never ran a model call).
 """
 from __future__ import annotations
 
@@ -55,7 +58,8 @@ class ServeMetrics:
         return self._retire[req_id]["tick"] - self._admit[req_id]["tick"]
 
     def summary(self, wall_s: float, T: int, flops_per_call: float,
-                requests, steps_of: Optional[Callable] = None) -> Dict:
+                requests, steps_of: Optional[Callable] = None,
+                decisions: Optional[Dict] = None) -> Dict:
         """Aggregate one run over ``requests`` (the completed Request
         objects) into the BENCH_serve.json record.
 
@@ -63,7 +67,18 @@ class ServeMetrics:
         per-request model-call counts — the engine passes its samplers'
         trajectory-relative split so strided (DDIM) requests are accounted
         at what they actually cost; the default is the dense CutPlan split.
+
+        ``decisions`` ({req_id: AdmissionDecision}, when the KID gate is
+        on) adds the ``admission`` section (:func:`admission_summary`) and
+        excludes REJECTED requests from the FLOP accounting — they never
+        executed a model call.
         """
+        decisions = decisions or {}
+
+        def _served(r):
+            d = decisions.get(r.req_id)
+            return d is None or d.served
+
         lat_t = np.array([self.latency_ticks(r.req_id) for r in requests
                           if self.latency_ticks(r.req_id) is not None],
                          dtype=np.float64)
@@ -76,7 +91,11 @@ class ServeMetrics:
                                   CutPlan(T, r.cut_ratio).n_client_steps)
         server_f = client_f = 0.0
         images = 0
+        n_served = 0
         for r in requests:
+            if not _served(r):
+                continue
+            n_served += 1
             n_srv, n_cli = steps_of(r)
             split = flops_split_steps(n_srv, n_cli, flops_per_call, r.batch)
             server_f += split["server_flops"]
@@ -87,11 +106,14 @@ class ServeMetrics:
             else (lambda q: 0.0)
         pctw = (lambda q: float(np.percentile(lat_w, q))) if lat_w.size \
             else (lambda q: 0.0)
-        return {
+        out = {
             "requests": len(requests),
+            "served": n_served,
             "images": images,
             "ticks": self.ticks,
-            "requests_per_s": len(requests) / max(wall_s, 1e-9),
+            # throughput counts SERVED requests only: rejected ones never
+            # ran a model call (ungated, served == requests)
+            "requests_per_s": n_served / max(wall_s, 1e-9),
             "images_per_s": images / max(wall_s, 1e-9),
             "latency_ticks_p50": pct(50),
             "latency_ticks_p95": pct(95),
@@ -103,3 +125,32 @@ class ServeMetrics:
             "client_flops": client_f,
             "client_fraction": client_f / total,
         }
+        if decisions:
+            out["admission"] = admission_summary(decisions.values())
+        return out
+
+
+def admission_summary(decisions, bins: int = 8) -> Dict:
+    """Fold AdmissionDecisions into a JSON-able record: action counts plus
+    a histogram of the SERVED disclosure KIDs (bumped requests included) —
+    the online guarantee "no served request discloses below the floor"
+    made inspectable in ``results/BENCH_privacy.json``."""
+    ds = list(decisions)
+    served = [d for d in ds if d.served]
+    kids = np.array([d.kid for d in served], np.float64)
+    rec = {
+        "min_kid": ds[0].min_kid if ds else 0.0,
+        "admitted": sum(1 for d in ds if d.action == "admit"),
+        "bumped": sum(1 for d in ds if d.action == "bump"),
+        "rejected": sum(1 for d in ds if d.action == "reject"),
+    }
+    if kids.size:
+        counts, edges = np.histogram(kids, bins=bins)
+        rec["disclosure_kid"] = {
+            "min": float(kids.min()),
+            "mean": float(kids.mean()),
+            "max": float(kids.max()),
+            "hist_counts": [int(c) for c in counts],
+            "hist_edges": [float(e) for e in edges],
+        }
+    return rec

@@ -21,6 +21,15 @@ into the currently free slots.  Two policies:
   any fresh arrival (whose score is ≥ 0; trajectory costs are ≤ T), so
   every queued request is admitted within a bounded number of ticks
   (asserted in tests/test_serve.py).
+
+Both policies accept a :class:`repro.serve.admission.AdmissionPolicy`
+(``admission=``; the engine injects its own when the scheduler arrives
+without one): ``select`` then GATES every candidate before it can occupy
+a slot — a request the policy rejects (no position on its trajectory
+clears the disclosure-KID floor) is dropped from the queue, recorded for
+:meth:`take_rejections`, and never blocks the candidates behind it; a
+bumped request is costed by its EFFECTIVE (noisier, cheaper) cut, so SJF
+keeps ordering by what the server will actually execute.
 """
 from __future__ import annotations
 
@@ -59,10 +68,12 @@ class Request:
 class FIFOScheduler:
     """Strict arrival order (head-of-line blocking)."""
 
-    def __init__(self):
+    def __init__(self, admission=None):
         self._queue: List[Request] = []
         self._seq = itertools.count()
         self._order = {}
+        self.admission = admission          # Optional[AdmissionPolicy]
+        self._rejections: List[Any] = []    # AdmissionDecisions from select
 
     def add(self, req: Request) -> None:
         self._order[req.req_id] = next(self._seq)
@@ -90,16 +101,37 @@ class FIFOScheduler:
         ordering into a liveness guarantee for batch > 1 requests: once a
         request heads the order, freed slots accumulate for it until its
         whole batch fits (batch ≤ capacity is asserted at engine
-        submit)."""
-        picked = []
+        submit).
+
+        With an ``admission`` policy, every candidate is GATED here —
+        before it can occupy a slot: rejected requests (disclosure KID
+        below the floor at every trajectory position) are dropped from the
+        queue and recorded for :meth:`take_rejections`; they neither block
+        nor age the candidates behind them."""
+        picked, dropped = [], []
         for r in self._candidates(now):
+            if self.admission is not None:
+                d = self.admission.decide(r)
+                if not d.served:
+                    dropped.append((r, d))
+                    continue
             if r.batch > free_slots:
                 break
             picked.append(r)
             free_slots -= r.batch
+        for r, d in dropped:
+            self._queue.remove(r)
+            self._rejections.append(d)
         for r in picked:
             self._queue.remove(r)
         return picked
+
+    def take_rejections(self) -> List[Any]:
+        """Drain the AdmissionDecisions of requests the select gate
+        dropped since the last call (the engine folds them into
+        ``ServeResult.decisions``)."""
+        out, self._rejections = self._rejections, []
+        return out
 
 
 class CutRatioScheduler(FIFOScheduler):
@@ -116,8 +148,8 @@ class CutRatioScheduler(FIFOScheduler):
     """
 
     def __init__(self, T: int, aging: float = 1.0,
-                 samplers: Optional[Dict[str, Any]] = None):
-        super().__init__()
+                 samplers: Optional[Dict[str, Any]] = None, admission=None):
+        super().__init__(admission=admission)
         assert aging > 0.0, "aging=0 reintroduces starvation"
         self.T = T
         self.aging = aging
@@ -125,7 +157,14 @@ class CutRatioScheduler(FIFOScheduler):
 
     def server_cost(self, req: Request) -> float:
         """Server model calls this request still needs: its trajectory's
-        step count above the cut (== (1-c)·T only for the dense chain)."""
+        step count above the cut (== (1-c)·T only for the dense chain).
+        Under an admission policy this is the EFFECTIVE cut — a bumped
+        request is a cheaper job than its nominal cut-ratio suggests, and
+        SJF must order by what the server will actually execute."""
+        if self.admission is not None:
+            d = self.admission.decide(req)
+            if d.served:
+                return float(d.effective_cut)
         if self.samplers and req.sampler in self.samplers:
             from repro.core.collafuse import CutPlan
             return float(CutPlan(self.T, req.cut_ratio).traj_server_steps(
@@ -145,9 +184,11 @@ class CutRatioScheduler(FIFOScheduler):
             key=lambda r: (self._score(r, now), self._order[r.req_id]))
 
 
-def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None):
+def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None,
+                   admission=None):
     if policy == "fifo":
-        return FIFOScheduler()
+        return FIFOScheduler(admission=admission)
     if policy == "cut_ratio":
-        return CutRatioScheduler(T, aging=aging, samplers=samplers)
+        return CutRatioScheduler(T, aging=aging, samplers=samplers,
+                                 admission=admission)
     raise ValueError(f"unknown scheduling policy: {policy!r}")

@@ -122,6 +122,35 @@ def test_extract_features_chunked_is_bitwise_stable(rng):
     assert bool((np.asarray(chunked) == np.asarray(one_shot)).all())
 
 
+def test_kid_single_image_batch_guard(rng):
+    """Regression: the unbiased estimator divides by m·(m-1)/n·(n-1) —
+    a single-image batch used to return NaN/inf (exactly what the
+    admission gate would feed it from a 1-image calibration batch).  Now:
+    loud assert by default, documented biased V-statistic fallback on
+    request, and the m,n >= 2 path bit-unchanged."""
+    fp = privacy.feature_params()
+    k1, k2 = jax.random.split(rng)
+    one = privacy.extract_features(fp, jax.random.normal(k1, (1, 16, 16, 1)))
+    many = privacy.extract_features(fp, jax.random.normal(k2, (8, 16, 16, 1)))
+    with pytest.raises(AssertionError, match="unbiased KID needs >= 2"):
+        privacy.kid_from_features(one, many)
+    with pytest.raises(AssertionError, match="unbiased KID needs >= 2"):
+        privacy.kid_from_features(many, one)
+    biased = float(privacy.kid_from_features(one, many,
+                                             small_batch="biased"))
+    assert np.isfinite(biased)
+    # the biased V-statistic keeps the diagonal: identical sets score the
+    # kernel's diagonal excess, still finite
+    assert np.isfinite(float(privacy.kid_from_features(
+        one, one, small_batch="biased")))
+    # m, n >= 2: the guard (and the fallback flag) must not perturb the
+    # unbiased estimator — bitwise the pre-guard value
+    a = privacy.extract_features(fp, jax.random.normal(k1, (6, 16, 16, 1)))
+    b = privacy.extract_features(fp, jax.random.normal(k2, (6, 16, 16, 1)))
+    assert float(privacy.kid_from_features(a, b)) == \
+        float(privacy.kid_from_features(a, b, small_batch="biased"))
+
+
 def test_kid_separates_distributions(rng):
     fp = privacy.feature_params()
     k1, k2 = jax.random.split(rng)

@@ -276,7 +276,7 @@ def test_engine_strided_retires_in_trajectory_ticks(models):
                       samplers=samplers)
     req = Request(req_id=0, key=jax.random.PRNGKey(50), cut_ratio=0.5,
                   sampler="ddim4")
-    cut = eng._cut_of(req)
+    cut = eng._effective_cut(req)
     assert cut < CutPlan(T, 0.5).n_server_steps
     res = eng.run([req])
     assert res.summary["ticks"] == cut
