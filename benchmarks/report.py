@@ -169,6 +169,29 @@ def masked_step_table(rec):
           f"**{rec['bytes_ratio']:.2f}x** (gate: >=2x)")
 
 
+def pod_ticks_table(rec):
+    print(f"k-tick lax.scan dispatch + double-buffered host loop — "
+          f"{rec['n_requests']} in-flight on {rec['slots']} slots, "
+          f"T={rec['T']}, k={rec['k']}, async_depth={rec['async_depth']}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| admission | config | ticks | wall s | ticks/s |")
+    print("|---|---|---|---|---|")
+    for label in ("off", "on"):
+        m = rec["modes"][f"admission_{label}"]
+        print(f"| {label} | k=1 sync | {m['base_ticks']} | "
+              f"{m['base_wall_s']:.3f} | {m['base_ticks_per_s']:.0f} |")
+        print(f"| {label} | k={rec['k']} depth={rec['async_depth']} | "
+              f"{m['hot_ticks']} | {m['hot_wall_s']:.3f} | "
+              f"{m['hot_ticks_per_s']:.0f} |")
+    worst = min(rec["modes"][f"admission_{l}"]["ticks_per_s_ratio"]
+                for l in ("off", "on"))
+    lag = max(rec["modes"][f"admission_{l}"]["boundary_lag_p100"]
+              for l in ("off", "on"))
+    print(f"\ncompletions bitwise-equal at every k; worst ticks/sec ratio "
+          f"**{worst:.2f}x** (gate: >=2x, full run); boundary lag p100 "
+          f"{lag} ticks (bound: k-1 = {rec['k'] - 1})")
+
+
 def summary(recs):
     n = len(recs)
     dom = {}
@@ -218,6 +241,10 @@ def main():
     if masked:
         print("\n## §Fused masked denoise tick (StepBackend pallas_masked)\n")
         masked_step_table(masked)
+    pod = _load_bench("pod_ticks")
+    if pod:
+        print("\n## §Pod-scale async serving (k-tick scan dispatch)\n")
+        pod_ticks_table(pod)
 
 
 if __name__ == "__main__":

@@ -276,8 +276,9 @@ def bench_serve_continuous(args):
     from repro.core.collafuse import CutPlan
     from repro.diffusion.schedule import cosine_schedule
     from repro.optim import adamw
-    from repro.serve import Request, ServeEngine, make_scheduler
-    from repro.serve.engine import sequential_fns, time_sequential
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             make_scheduler, time_sequential)
+    from repro.serve.engine import sequential_fns
 
     slots, n_requests, T = (8, 16, 10) if args.toy else (32, 64, 50)
     n_clients = 4
@@ -297,8 +298,9 @@ def bench_serve_continuous(args):
                         client_idx=i % n_clients)
                 for i in range(n_requests)]
 
-    eng = ServeEngine(sched, apply_fn, server_params, shape, slots=slots,
-                      scheduler=make_scheduler("fifo", T))
+    cfg = EngineConfig(sched=sched, apply_fn=apply_fn, image_shape=shape,
+                       slots=slots, scheduler=make_scheduler("fifo", T))
+    eng = ServeEngine(cfg, server_params)
 
     print(f"# serve_continuous: {n_requests} requests (batch 1, "
           f"c∈{cut_ratios}) on {slots} slots, T={T}, MLP eps-model")
@@ -307,7 +309,7 @@ def bench_serve_continuous(args):
 
     server_fn, client_fn_for = sequential_fns(apply_fn, server_params,
                                               client_stack)
-    seq_s = time_sequential(sched, requests, server_fn, client_fn_for, shape)
+    seq_s = time_sequential(cfg, requests, server_params, client_stack)
 
     # spot-check the engine against the per-lane sample_range reference
     for r in (requests[0], requests[-1]):
@@ -535,7 +537,7 @@ def bench_ddim_speedup(args):
     from repro.diffusion.sampler import (Sampler, dense_trajectory,
                                          make_sampler, sample_trajectory)
     from repro.diffusion.schedule import cosine_schedule
-    from repro.serve import Request, ServeEngine
+    from repro.serve import EngineConfig, Request, ServeEngine
 
     T, K = (200, 20) if args.toy else (1000, 50)
     slots, n_req = (8, 8) if args.toy else (32, 16)
@@ -548,8 +550,9 @@ def bench_ddim_speedup(args):
     server_params = init_fn(jax.random.PRNGKey(0))
     samplers = {"ddpm": make_sampler(T),
                 "ddim": make_sampler(T, "ddim", K, eta=0.0)}
-    eng = ServeEngine(sched, apply_fn, server_params, shape, slots=slots,
-                      samplers=samplers)
+    eng = ServeEngine(EngineConfig(sched=sched, apply_fn=apply_fn,
+                                   image_shape=shape, slots=slots,
+                                   samplers=samplers), server_params)
 
     def reqs(name):
         return [Request(req_id=i, key=jax.random.fold_in(
@@ -561,8 +564,8 @@ def bench_ddim_speedup(args):
           f"slots — dense DDPM T={T} vs strided DDIM K={K}, same engine")
     rows = {}
     for name in ("ddpm", "ddim"):
-        eng.run(reqs(name))                           # compile + warmup
-        res = eng.run(reqs(name))
+        eng.serve(reqs(name))                         # compile + warmup
+        res = eng.serve(reqs(name))
         rows[name] = {"ticks": res.summary["ticks"],
                       "ticks_per_request": res.summary["ticks"] / n_req,
                       "engine_s": res.wall_s,
@@ -665,8 +668,8 @@ def bench_privacy_admission(args):
     from repro.data.synthetic import ClientDataConfig, make_client_datasets
     from repro.diffusion.sampler import make_sampler
     from repro.diffusion.schedule import cosine_schedule
-    from repro.serve import (AdmissionPolicy, Request, ServeEngine,
-                             make_scheduler)
+    from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                             ServeEngine, make_scheduler)
 
     T, K = (20, 6) if args.toy else (50, 10)
     slots, n_req = (4, 9) if args.toy else (16, 24)
@@ -693,11 +696,12 @@ def bench_privacy_admission(args):
                 for i in range(n_req)]
 
     def engine(admission):
-        return ServeEngine(sched, apply_fn, server_params, shape,
+        cfg = EngineConfig(sched=sched, apply_fn=apply_fn, image_shape=shape,
                            slots=slots, samplers=samplers,
                            scheduler=make_scheduler("cut_ratio", T,
                                                     samplers=samplers),
                            admission=admission)
+        return ServeEngine(cfg, server_params)
 
     # ---- measure the disclosure landscape, derive the floor -----------
     probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
@@ -727,8 +731,8 @@ def bench_privacy_admission(args):
           f"calib={calib_n}, derived min_kid={min_kid:.5f}")
 
     # ---- ungated vs gate-clearing: bitwise no-op ----------------------
-    res_off = engine(None).run(requests())
-    res_clear = engine(probe.with_min_kid(float("-inf"))).run(requests())
+    res_off = engine(None).serve(requests())
+    res_clear = engine(probe.with_min_kid(float("-inf"))).serve(requests())
     for rid in res_off.completions:
         np.testing.assert_array_equal(
             res_off.completions[rid].x_mid, res_clear.completions[rid].x_mid,
@@ -737,13 +741,13 @@ def bench_privacy_admission(args):
 
     # ---- gated run: floor guarantee + tick budget + determinism -------
     gate = probe.with_min_kid(min_kid)
-    res_g = engine(gate).run(requests())
+    res_g = engine(gate).serve(requests())
     # the second run gets a FULLY FRESH policy (fresh jit + score +
     # decision caches), so the determinism assert exercises real
     # re-scoring, not cached objects compared to themselves
     gate2 = AdmissionPolicy(sched, calib, min_kid=min_kid,
                             samplers=samplers, server_fn=server_fn)
-    res_g2 = engine(gate2).run(requests())
+    res_g2 = engine(gate2).serve(requests())
     assert res_g.decisions == res_g2.decisions, "gated decisions drifted"
     for rid in res_g.completions:
         np.testing.assert_array_equal(
@@ -763,7 +767,7 @@ def bench_privacy_admission(args):
 
     # ---- reject path: floor above the whole landscape -----------------
     reject_floor = max(max(p) for p in profiles.values()) + 1.0
-    res_r = engine(probe.with_min_kid(reject_floor)).run(requests())
+    res_r = engine(probe.with_min_kid(reject_floor)).serve(requests())
     assert res_r.completions == {}
     assert res_r.summary["admission"]["rejected"] == n_req
 
@@ -798,6 +802,114 @@ def bench_privacy_admission(args):
 # ---------------------------------------------------------------------------
 # Pallas kernels vs oracle
 # ---------------------------------------------------------------------------
+def bench_pod_ticks(args):
+    """k-tick scan-dispatch gate: the k=8 double-buffered engine must be
+    BITWISE-equal to the k=1 synchronous engine on every completion —
+    admission gate on AND off — and (full run) >=2x ticks/sec with 256
+    in-flight requests churning through 32 slots.  The backbone is the
+    tiny MLP eps-model so the measurement isolates dispatch/boundary
+    overhead: k fuses k denoise ticks into one device call under
+    lax.scan, async_depth=2 double-buffers the host loop, and
+    retire/refill bookkeeping collapses from every tick to every k-th
+    tick — the dominant cost under heavy slot churn.  Writes
+    results/BENCH_pod_ticks.json (uploaded by the CI bench-smoke job)."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.diffusion.sampler import make_sampler
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                             ServeEngine)
+
+    T, K = (10, 5) if args.toy else (50, 10)
+    slots = 8 if args.toy else 32
+    n_req = 12 if args.toy else 256
+    k_hot, depth = 8, 2
+    size = 8
+    shape = (size, size, 1)
+    cut_ratios = (0.25, 0.5, 0.75)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    samplers = {"ddpm": make_sampler(T),
+                "ddim": make_sampler(T, "ddim", K, eta=0.0)}
+
+    def requests():
+        return [Request(req_id=i, key=jax.random.fold_in(
+                            jax.random.PRNGKey(7), i),
+                        batch=1, cut_ratio=cut_ratios[i % len(cut_ratios)],
+                        sampler=("ddpm", "ddim")[i % 2])
+                for i in range(n_req)]
+
+    def admission():
+        # median floor over the ddim disclosure profile: some requests
+        # bump, and the decisions must replay identically at every k
+        calib = jnp.tanh(jax.random.normal(jax.random.PRNGKey(5),
+                                           (8,) + shape))
+        probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
+                                samplers=samplers,
+                                server_fn=functools.partial(apply_fn,
+                                                            server_params))
+        return probe.with_min_kid(float(np.median(probe.profile("ddim"))))
+
+    base_cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                            image_shape=shape, slots=slots,
+                            samplers=samplers)
+
+    def run(cfg, admit):
+        eng = ServeEngine(dataclasses.replace(
+            cfg, admission=admission() if admit else None), server_params)
+        eng.serve(requests())                         # compile + warmup
+        return eng.serve(requests())
+
+    print(f"# pod_ticks: {n_req} in-flight (batch 1, mixed ddpm/ddim) on "
+          f"{slots} slots, T={T} — k=1 sync vs k={k_hot} depth={depth}")
+    print("admission,config,ticks,wall_s,ticks_per_s")
+    rec = {"scenario": "pod_ticks", "toy": bool(args.toy), "slots": slots,
+           "n_requests": n_req, "T": T, "k": k_hot, "async_depth": depth,
+           "modes": {}}
+    ratios = {}
+    for admit in (False, True):
+        base = run(base_cfg, admit)
+        hot = run(dataclasses.replace(base_cfg, ticks_per_dispatch=k_hot,
+                                      async_depth=depth), admit)
+        assert set(hot.completions) == set(base.completions)
+        assert hot.decisions == base.decisions
+        for rid, comp in base.completions.items():
+            np.testing.assert_array_equal(
+                hot.completions[rid].x_mid, comp.x_mid,
+                err_msg=f"req {rid} admission={admit}")
+        label = "on" if admit else "off"
+        for nm, res in (("k1", base), (f"k{k_hot}", hot)):
+            print(f"{label},{nm},{res.summary['ticks']},{res.wall_s:.3f},"
+                  f"{res.summary['ticks_per_s']:.1f}")
+        ratios[label] = (hot.summary["ticks_per_s"] /
+                         base.summary["ticks_per_s"])
+        rec["modes"][f"admission_{label}"] = {
+            "bitwise_equal": True,
+            "base_ticks": base.summary["ticks"],
+            "hot_ticks": hot.summary["ticks"],
+            "base_wall_s": base.wall_s, "hot_wall_s": hot.wall_s,
+            "base_ticks_per_s": base.summary["ticks_per_s"],
+            "hot_ticks_per_s": hot.summary["ticks_per_s"],
+            "ticks_per_s_ratio": ratios[label],
+            "boundary_lag_p100": hot.summary.get("boundary_lag_p100", 0)}
+        print(f"admission {label}: bitwise equal, "
+              f"ticks/sec {ratios[label]:.2f}x", flush=True)
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_pod_ticks.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out}")
+    if not args.toy:
+        # issue gate: k-tick scan dispatch >=2x ticks/sec at 256 in-flight
+        assert min(ratios.values()) >= 2.0, \
+            f"k={k_hot} scan dispatch only {min(ratios.values()):.2f}x"
+    return rec
+
+
 def bench_kernels(args):
     from repro.diffusion import ddpm as ddpm_mod
     from repro.diffusion.schedule import cosine_schedule
@@ -894,6 +1006,7 @@ BENCHES = {
     "serve_continuous": bench_serve_continuous,
     "ddim_speedup": bench_ddim_speedup,
     "privacy_admission": bench_privacy_admission,
+    "pod_ticks": bench_pod_ticks,
     "kernels": bench_kernels,
     "masked_step": bench_masked_step,
     "roofline": bench_roofline,

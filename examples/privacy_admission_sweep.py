@@ -26,7 +26,8 @@ from repro.diffusion.sampler import make_sampler
 from repro.diffusion.schedule import cosine_schedule
 from repro.models import unet
 from repro.optim import adamw
-from repro.serve import AdmissionPolicy, Request, ServeEngine, make_scheduler
+from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                         ServeEngine, make_scheduler)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "privacy_admission_sweep.json")
@@ -98,12 +99,13 @@ def main():
     rows = []
     for floor in floors:
         pol = probe.with_min_kid(floor)
-        eng = ServeEngine(
-            sched, apply_fn, server_params,
-            (args.image, args.image, 1), slots=args.slots,
+        cfg = EngineConfig(
+            sched=sched, apply_fn=apply_fn,
+            image_shape=(args.image, args.image, 1), slots=args.slots,
             scheduler=make_scheduler("cut_ratio", args.T,
                                      samplers=samplers),
             samplers=samplers, admission=pol)
+        eng = ServeEngine(cfg, server_params)
         res = eng.serve(list(requests), client_stack)
         adm = res.summary["admission"]
         dk = adm.get("disclosure_kid", {})

@@ -40,8 +40,9 @@ interpret mode on CPU, compiled Mosaic on TPU.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Union
+from typing import Callable, Dict, Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 
@@ -99,6 +100,48 @@ class StepBackend:
                                 clip=clip)
         m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
         return jnp.where(m, x_new, x)
+
+
+def make_lane_tick(apply_fn: Callable, masked_index: Callable, offsets,
+                   ts_pad, kmax: int, image_shape) -> Callable:
+    """Build the SCAN-COMPATIBLE masked lane tick every hot loop shares.
+
+    One tick of a slot array walking heterogeneous trajectories:
+
+        x, pos, key, done = lane_tick(params, x, pos, key, end, traj, gate)
+
+    ``gate`` is the caller's liveness mask (engine: the slot's ``active``
+    flag; finisher: the padding-lane ``valid`` flag).  A lane steps only
+    while ``gate & (pos < end)``; once ``pos`` reaches ``end`` the lane
+    HOLDS ``x``, ``pos`` and ``key`` bitwise (the masked-select / Pallas
+    passthrough), which is exactly the done-latching ``lax.scan`` needs:
+    the carry is a fixed point after the lane finishes, so running k ticks
+    per dispatch and retiring at the scan boundary reads the same ``x`` the
+    lane had at its cut — bit-for-bit, at any k.
+
+    The function is pure in (carry, params) with every table closed over as
+    a constant, so it traces once whether the caller wraps it in
+    ``lax.scan`` (the engine's k-tick window), ``lax.fori_loop`` (the
+    client finisher) or calls it directly.  ``masked_index`` is the
+    StepBackend's ``masked_index_step`` partial — backend choice stays a
+    construction-time decision.
+    """
+    def lane_tick(params, x, pos, key, end, traj, gate):
+        stepping = gate & (pos < end)
+        pos_c = jnp.clip(pos, 0, kmax - 1)
+        t_lane = ts_pad[traj, pos_c]          # model conditions on t
+        eps_hat = apply_fn(params, x, t_lane)
+        ks = jax.vmap(jax.random.split)(key)
+        k_next, k_n = ks[:, 0], ks[:, 1]
+        noise = jax.vmap(
+            lambda k: jax.random.normal(k, image_shape, jnp.float32))(k_n)
+        cols = offsets[traj] + pos_c
+        x = masked_index(x, cols, eps_hat, noise, stepping)
+        pos = jnp.where(stepping, pos + 1, pos)
+        key = jnp.where(stepping[:, None], k_next, key)
+        done = stepping & (pos >= end)        # x now holds the cut tensor
+        return x, pos, key, done
+    return lane_tick
 
 
 _REGISTRY: Dict[str, StepBackend] = {}

@@ -129,6 +129,22 @@ def masked_step_bytes(x, C: int, *, block: int = 4096) -> int:
     return 4 * s * dp * x.dtype.itemsize + 4 * C * 4 + s * 2 * 4
 
 
+def lane_meta(cols, active, C: int) -> jnp.ndarray:
+    """(S, 2) i32 SMEM meta block — (clamped column, active flag) per lane
+    — the only per-tick scalars :func:`traj_masked_step` stages.  Split out
+    so callers scanning the kernel (the serving engine runs k ticks per
+    dispatch under ``lax.scan``) can see the scan invariant at the seam:
+    everything else the kernel reads (the (4, C) table, block geometry,
+    clip) is a trace-time constant, so the whole k-tick window lowers to
+    ONE Pallas program re-entered k times with fresh (meta, x, ε̂, z) —
+    no per-tick retrace, no per-tick recompile.  Inactive lanes pass x
+    through bit-unchanged, which is the done-latching the scan relies on:
+    a lane whose ``active`` drops mid-window carries its cut tensor
+    bitwise to the scan boundary."""
+    col_safe = jnp.clip(cols, 0, C - 1)
+    return jnp.stack([col_safe, active.astype(jnp.int32)], axis=-1)
+
+
 def _masked_step_kernel(meta_ref, tab_ref, x_ref, eps_ref, noise_ref, o_ref,
                         *, clip):
     """meta: (1, 2) i32 = (col_safe, active) in SMEM; tab: (4, C) f32 in
@@ -166,8 +182,7 @@ def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
     """
     s = x.shape[0]
     C = tables.shape[1]
-    col_safe = jnp.clip(cols, 0, C - 1)
-    meta = jnp.stack([col_safe, active.astype(jnp.int32)], axis=-1)
+    meta = lane_meta(cols, active, C)
     flat = x.reshape(s, -1)
     d = flat.shape[1]
     blk = min(block, d)

@@ -55,6 +55,15 @@ def _parse_args(argv=None):
     ap.add_argument("--calib", type=int, default=16,
                     help="calibration batch size for the admission gate "
                          "(synthetic client images; needs >= 2)")
+    ap.add_argument("--ticks-per-dispatch", type=int, default=1,
+                    help="k denoise ticks fused per device call under "
+                         "lax.scan; retire/refill happen at window "
+                         "boundaries (up to k-1 extra ticks of latency for "
+                         "k fewer host round-trips per tick)")
+    ap.add_argument("--async-depth", type=int, default=1,
+                    help="scan windows in flight: 1 = synchronous, 2 = "
+                         "double-buffered (dispatch window N+1 while "
+                         "window N's done-mask is in flight)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="0 = all at tick 0; k = one request every k ticks")
     ap.add_argument("--devices", type=int, default=0,
@@ -84,8 +93,8 @@ def main(argv=None):
     from repro.models.layers import ShardCtx
     from repro.optim import adamw
     from repro.parallel import sharding as shd
-    from repro.serve import Request, ServeEngine, make_scheduler
-    from repro.serve.engine import sequential_fns, time_sequential
+    from repro.serve import (EngineConfig, Request, ServeEngine,
+                             make_scheduler, time_sequential)
 
     d, m = mesh.shape["data"], mesh.shape["model"]
     if args.sampler == "ddpm" and args.num_steps:
@@ -141,12 +150,15 @@ def main(argv=None):
             admission = AdmissionPolicy(sched, calib_sets[0],
                                         min_kid=args.min_kid,
                                         samplers=samplers)
-        eng = ServeEngine(
-            sched, apply_fn, server_params, (args.image, args.image, 1),
-            slots=args.slots,
+        cfg = EngineConfig(
+            sched=sched, apply_fn=apply_fn,
+            image_shape=(args.image, args.image, 1), slots=args.slots,
             scheduler=make_scheduler(args.policy, args.T, samplers=samplers),
             step_backend=args.step_backend, mesh=mesh, samplers=samplers,
-            admission=admission)
+            admission=admission,
+            ticks_per_dispatch=args.ticks_per_dispatch,
+            async_depth=args.async_depth)
+        eng = ServeEngine(cfg, server_params)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
         res = eng.serve(list(requests), client_stack)      # warm jit cache
@@ -173,11 +185,8 @@ def main(argv=None):
                 f"non-finite output for request {comp.request.req_id}"
 
         if args.compare_sequential:
-            server_fn, client_fn_for = sequential_fns(
-                apply_fn, server_params, client_stack)
-            seq_s = time_sequential(sched, requests, server_fn,
-                                    client_fn_for, (args.image, args.image, 1),
-                                    samplers=samplers)
+            seq_s = time_sequential(cfg, requests, server_params,
+                                    client_stack)
             s["sequential_s"] = seq_s
             s["speedup_vs_sequential"] = seq_s / res.wall_s
             print(f"sequential split_sample: {seq_s:.2f}s -> "

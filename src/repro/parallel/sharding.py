@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.layers import ShardCtx
@@ -216,6 +217,27 @@ def slot_specs(state_abstract, ctx: ShardCtx):
     one pjit program with zero cross-lane collectives (lanes are
     independent chains).  Same leading-axis rule as client stacks."""
     return client_stack_specs(state_abstract, ctx)
+
+
+def gathered_sharding(mesh) -> NamedSharding:
+    """Fully-replicated sharding — the serving engine constrains its scan
+    window's done-mask stack to this so EVERY host can read the mask with a
+    plain ``np.asarray`` (the SPMD partitioner inserts the all-gather).
+    This is the one collective in the pod serving loop: slot state stays
+    sharded over ``data`` (``slot_specs``), but retirement is a HOST
+    decision every process must agree on, so the (k, slots) bool mask is
+    gathered while the (k·slots·image) tensors are not."""
+    return NamedSharding(mesh, P())
+
+
+def lane_owners(slots: int, hosts: int):
+    """Owner host of every serving-engine lane: contiguous blocks of
+    ``slots // hosts``, matching how ``slot_specs`` lays the slot axis out
+    over the ``data`` axis in process order — lane i's rows land in host
+    ``owner[i]``'s addressable shards, so each host can materialize exactly
+    its owned lanes' ``x`` without any cross-host traffic."""
+    assert hosts >= 1 and slots % hosts == 0, (slots, hosts)
+    return np.repeat(np.arange(hosts), slots // hosts)
 
 
 def to_shardings(spec_tree, mesh):

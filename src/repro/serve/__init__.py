@@ -12,15 +12,19 @@
                 admission decision counts + disclosure-KID histogram.
 """
 from repro.serve.admission import AdmissionDecision, AdmissionPolicy
-from repro.serve.engine import (Completion, ServeEngine, ServeResult,
-                                serve_sequential)
+from repro.serve.engine import (Completion, EngineConfig, ServeEngine,
+                                ServeResult, serve_sequential,
+                                time_sequential)
 from repro.serve.metrics import ServeMetrics, admission_summary
 from repro.serve.scheduler import (CutRatioScheduler, FIFOScheduler, Request,
                                    make_scheduler)
 
+# the stable public surface: construct an EngineConfig, hand it (plus the
+# server weights) to ServeEngine, and call serve() — everything else here
+# is the supporting vocabulary (requests, schedulers, admission, metrics)
 __all__ = [
     "AdmissionDecision", "AdmissionPolicy", "Completion",
-    "CutRatioScheduler", "FIFOScheduler", "Request", "ServeEngine",
-    "ServeMetrics", "ServeResult", "admission_summary", "make_scheduler",
-    "serve_sequential",
+    "CutRatioScheduler", "EngineConfig", "FIFOScheduler", "Request",
+    "ServeEngine", "ServeMetrics", "ServeResult", "admission_summary",
+    "make_scheduler", "serve_sequential", "time_sequential",
 ]

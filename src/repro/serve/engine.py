@@ -13,44 +13,51 @@ diffusion analogue of LLM continuous batching:
 * Every slot walks a TRAJECTORY (``repro.diffusion.sampler``) — the dense
   {T..1} DDPM chain or a strided K-step DDIM subsequence, chosen per
   request from the engine's registered sampler menu.  Per-slot counters
-  are trajectory POSITIONS, not raw timesteps: a DDIM-50 request retires
-  after ~50 server ticks where a dense T=1000 request needs ~(1-c)·1000 —
-  a direct serving-throughput multiplier, gated ≥5x in ``benchmarks.run
-  --only ddim_speedup``.
-* Every engine tick runs ONE jitted masked trajectory step across the
-  whole slot array: all registered samplers' coefficient tables are
-  concatenated column-wise ONCE at construction, and each lane gathers its
-  own column — so heterogeneous samplers, cut-ratios and timesteps share
-  one program.  The step itself is a ``StepBackend``
-  (``repro.diffusion.backend``) taken once at construction; under
-  ``"pallas_masked"`` the whole gather→step→clip→select tick is ONE fused
-  Pallas program — O(1) dispatches per tick regardless of how many
-  requests are in flight.
-* When a slot reaches its request's cut position
-  (``CutPlan.cut_index(sampler)`` — the trajectory point nearest t_split)
-  the engine retires it and emits the DISCLOSED tensor of the protocol (x
-  at the cut); freed slots are refilled from the queue mid-flight.
+  are trajectory POSITIONS, not raw timesteps.
+* Every DISPATCH runs ``ticks_per_dispatch`` masked trajectory ticks
+  under ONE ``lax.scan`` — the k-tick fused window.  Each tick steps all
+  live lanes (per-lane column gather into the concatenated sampler
+  tables, one ``StepBackend`` program); a lane reaching its cut position
+  mid-window latches: its carry (x, pos, key) is a bitwise fixed point of
+  :func:`repro.diffusion.backend.make_lane_tick`, so retiring at the scan
+  BOUNDARY reads the exact cut tensor at any k.  The scan emits a
+  (k, slots) per-tick done stack, from which the host recovers each
+  lane's exact finish tick for latency accounting.
+* The host loop is DOUBLE-BUFFERED (``async_depth``): window N+1 is
+  dispatched while window N's done-mask and retired x are still in
+  flight — JAX's async dispatch overlaps the host's retire/refill
+  bookkeeping with device compute; the loop only blocks on the OLDEST
+  in-flight window once the pipeline is full.  Admission and retirement
+  happen at window boundaries only (``scheduler.select_window``).
+* POD MODE (``hosts`` > 1): slots are partitioned into contiguous
+  per-host blocks (``sharding.lane_owners``, aligned with how
+  ``sharding.slot_specs`` shards the slot axis over ``data``), every
+  process replicates the deterministic scheduler/bookkeeping loop over
+  one shared queue, the done stack is constrained REPLICATED
+  (``sharding.gathered_sharding``) so every host reads it locally, and
+  each host materializes the cut tensors of its OWNED lanes only
+  (``Completion.owned`` marks which rows this host holds).
 * A client-segment finisher completes the remaining trajectory positions
-  for every emitted image under its client's private model.  Lanes are
-  GROUPED BY CLIENT before the masked loop: each client's group takes one
-  batched model call against that client's params row (vmap pairs the
-  stacked client axis with the grouped lane axis positionally), replacing
-  the old per-lane gather of a full private-model copy — O(n_clients)
-  param traffic per step instead of O(lanes).
+  for every emitted image under its client's private model, grouped by
+  client — the same shared lane tick under ``fori_loop``.
 
 Key discipline: lane i of a request uses ``fold_in(req.key, i)`` split
 into (k_init, k_srv, k_cli) — see :func:`repro.core.collafuse.lane_keys` —
 and within a segment follows ``sample_range``'s ``k, k_n = split(k)`` chain
 exactly, so every lane is replayed bit-for-bit in key space by
-:func:`repro.core.collafuse.split_sample_lane` with the same sampler
-(numerical agreement is asserted in tests/test_serve.py and
-tests/test_sampler.py).
+:func:`repro.core.collafuse.split_sample_lane` with the same sampler.
+Because lane numerics depend ONLY on that key chain (never on slot index,
+tick number, or neighbouring lanes), completions are bitwise invariant
+under ``ticks_per_dispatch`` and ``async_depth`` — gated in
+``benchmarks.run --only pod_ticks`` and tests/test_serve.py.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -59,7 +66,8 @@ import numpy as np
 
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
-from repro.diffusion.backend import BackendLike, get_backend
+from repro.diffusion.backend import (BackendLike, get_backend,
+                                     make_lane_tick)
 from repro.diffusion.sampler import Sampler, assert_same_menu, default_samplers
 from repro.diffusion.schedule import DiffusionSchedule
 from repro.serve.admission import AdmissionDecision, AdmissionPolicy
@@ -75,9 +83,14 @@ class Completion:
     request: Request
     x_mid: np.ndarray                  # [batch, H, W, C] at the cut
     admit_tick: int
-    retire_tick: int
+    retire_tick: int                   # scan-window boundary the lane
+    #                                    retired at (== exact finish tick
+    #                                    when ticks_per_dispatch == 1)
     k_cli: Optional[np.ndarray] = None  # [batch, 2] client-segment keys
-    x0: Optional[np.ndarray] = None    # filled by finish_clients
+    x0: Optional[np.ndarray] = None    # filled by the client finish
+    client_finished: bool = False      # did serve() run the client segment?
+    owned: Optional[np.ndarray] = None  # [batch] bool: x_mid rows THIS host
+    #                                     materialized (all True off-pod)
 
 
 @dataclasses.dataclass
@@ -95,64 +108,138 @@ class ServeResult:
         return {rid: d for rid, d in self.decisions.items() if not d.served}
 
 
-class ServeEngine:
-    """Fixed-capacity slot array + jitted masked tick + admission/retire.
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything a :class:`ServeEngine` is, minus the server weights.
 
-    ``apply_fn(params, x, t) -> eps_hat`` is the backbone convention shared
-    with :class:`repro.core.trainer.CollaFuseTrainer`; ``server_params`` is
-    the shared server model, ``client_stack`` (optional, for
-    :meth:`serve`) the [n_clients, ...] stacked private models.  Pass
-    ``mesh`` to pin the slot array onto the ``data`` axis — the tick then
-    runs as the pjit program ``launch/serve_diffusion.py`` lowers.
+    ``ServeEngine(config, server_params)`` is the one constructor; the
+    config is FROZEN and validated here, at construction time, so a
+    misconfigured engine fails before it owns a queue:
 
-    ``step_backend`` names (or is) the StepBackend executing the masked
-    denoise update (``repro.diffusion.backend``): resolved ONCE here, bound
-    together with the clip and the hoisted trajectory coefficient table
-    into ``self._masked_index``, which both the tick and the client
-    finisher call — no per-tick coefficient recompute, no flag
-    re-derivation in ``_make_tick``/``_make_finish``.
-
-    ``samplers`` is the engine's sampler MENU ({name: Sampler}) — the
-    trajectories requests may walk (``Request.sampler`` names one; default
-    menu is the dense DDPM chain under ``"ddpm"``).  All menu tables are
-    concatenated column-wise once here; per-lane columns select into the
-    concatenation, so mixed-sampler traffic shares one tick program.  A
-    :class:`CutRatioScheduler` supplied without a sampler menu inherits
-    this one, so its SJF cost model counts trajectory steps (one supplied
-    WITH a menu must agree with the engine's — asserted here).
-
-    ``admission`` is an optional :class:`repro.serve.admission.\
-AdmissionPolicy` — the KID gate: each request's disclosure is scored
-    before it occupies a slot, below-floor requests are bumped to a
-    noisier cut or rejected, and every decision is surfaced in
-    ``ServeResult.decisions`` and the metrics summary.  The engine binds
-    its server model + sampler menu into the policy and shares it with
-    the scheduler (whose ``select`` formally drops rejected requests).
-    ``admission=None`` (default) is the pre-gate path, bitwise unchanged.
+    * ``image_shape`` is canonicalized to a tuple.
+    * ``samplers`` (the trajectory menu requests name into; None = the
+      dense DDPM chain) must be built for the engine's schedule ``T``.
+    * ``admission`` (optional KID gate) must be calibrated for the same
+      ``T``; the engine binds its server model + menu into the policy and
+      shares it with the scheduler.
+    * ``ticks_per_dispatch`` (k) is the fused ``lax.scan`` window depth:
+      retire/refill happen at window boundaries only, so k trades up to
+      k-1 ticks of per-request boundary latency for k fewer host
+      round-trips per tick.  ``async_depth`` is the number of windows in
+      flight: 1 = synchronous (block on each window), 2 = double-buffered
+      (bookkeep window N while N+1 computes).  Neither changes completion
+      tensors — lanes latch bitwise at their cut inside the scan.
+    * pod mode: ``hosts`` > 1 partitions the ``slots`` lanes into
+      contiguous per-host ownership blocks (``slots % hosts == 0``);
+      ``host_id`` defaults to ``jax.process_index()`` under a real
+      ``jax.distributed`` launch and is overridable for simulated-host
+      tests.
     """
 
-    def __init__(self, sched: DiffusionSchedule, apply_fn: Callable,
-                 server_params, image_shape, *, slots: int = 32,
-                 scheduler=None, clip: float = 3.0,
-                 step_backend: BackendLike = None, mesh=None,
-                 samplers: Optional[Dict[str, Sampler]] = None,
-                 admission: Optional[AdmissionPolicy] = None,
-                 flops_per_call: Optional[float] = None):
-        self.sched = sched
-        self.apply_fn = apply_fn
+    sched: DiffusionSchedule
+    apply_fn: Callable
+    image_shape: Any
+    slots: int = 32
+    scheduler: Any = None
+    clip: float = 3.0
+    step_backend: BackendLike = None
+    mesh: Any = None
+    samplers: Optional[Dict[str, Sampler]] = None
+    admission: Optional[AdmissionPolicy] = None
+    flops_per_call: Optional[float] = None
+    ticks_per_dispatch: int = 1
+    async_depth: int = 1
+    hosts: int = 1
+    host_id: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "image_shape", tuple(self.image_shape))
+        assert self.slots >= 1, self.slots
+        assert 1 <= self.ticks_per_dispatch <= 512, \
+            f"ticks_per_dispatch={self.ticks_per_dispatch} outside [1, 512]" \
+            " — the scan window must be positive and bounded (unrolled " \
+            "retire latency and liveness bounds scale with it)"
+        assert 1 <= self.async_depth <= 32, \
+            f"async_depth={self.async_depth} outside [1, 32]"
+        assert self.hosts >= 1, self.hosts
+        assert self.slots % self.hosts == 0, \
+            f"slots={self.slots} not divisible by hosts={self.hosts} — " \
+            "lane ownership is contiguous equal blocks"
+        if self.host_id is not None:
+            assert 0 <= self.host_id < self.hosts, \
+                f"host_id={self.host_id} outside [0, {self.hosts})"
+        if self.samplers is not None:
+            for name, s in self.samplers.items():
+                assert s.trajectory.T == self.sched.T, \
+                    f"sampler {name!r} built for T={s.trajectory.T}, " \
+                    f"engine schedule has T={self.sched.T}"
+        if self.admission is not None:
+            assert self.admission.sched.T == self.sched.T, \
+                f"admission policy calibrated for T=" \
+                f"{self.admission.sched.T}, engine schedule has " \
+                f"T={self.sched.T}"
+
+
+class ServeEngine:
+    """Fixed-capacity slot array + k-tick fused scan window + async
+    retire/refill.  Construct with ``ServeEngine(EngineConfig(...),
+    server_params)`` and call :meth:`serve` — the single entrypoint.
+
+    ``config.apply_fn(params, x, t) -> eps_hat`` is the backbone
+    convention shared with :class:`repro.core.trainer.CollaFuseTrainer`;
+    ``server_params`` is the shared server model.  See
+    :class:`EngineConfig` for every knob (sampler menu, KID admission,
+    StepBackend, mesh, scan/async depths, pod-mode lane ownership) —
+    all are resolved/validated ONCE here, at construction.
+
+    The legacy keyword constructor ``ServeEngine(sched, apply_fn,
+    server_params, image_shape, **knobs)`` is kept for ONE release as a
+    deprecation shim that builds the config for you — new call sites must
+    pass an :class:`EngineConfig` (enforced by
+    ``tools/check_engine_config.py`` in CI).
+    """
+
+    def __init__(self, config, server_params=None, *legacy, **kw):
+        if isinstance(config, EngineConfig):
+            if legacy or kw:
+                raise TypeError(
+                    "ServeEngine(EngineConfig, server_params) takes no "
+                    f"further arguments (got {legacy!r}, {kw!r})")
+            cfg = config
+        else:
+            # legacy positional signature:
+            #   ServeEngine(sched, apply_fn, server_params, image_shape, **kw)
+            warnings.warn(
+                "ServeEngine(sched, apply_fn, server_params, image_shape, "
+                "**knobs) is deprecated; build an EngineConfig and call "
+                "ServeEngine(config, server_params)",
+                DeprecationWarning, stacklevel=2)
+            if len(legacy) != 2:
+                raise TypeError(
+                    "legacy signature is ServeEngine(sched, apply_fn, "
+                    "server_params, image_shape, **knobs)")
+            sched, apply_fn = config, server_params
+            server_params, image_shape = legacy
+            cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                               image_shape=image_shape, **kw)
+        self.config = cfg
+        self.sched = cfg.sched
+        self.apply_fn = cfg.apply_fn
         self.server_params = server_params
-        self.image_shape = tuple(image_shape)
-        self.slots = slots
-        self.scheduler = scheduler if scheduler is not None \
+        self.image_shape = cfg.image_shape
+        self.slots = cfg.slots
+        self.scheduler = cfg.scheduler if cfg.scheduler is not None \
             else FIFOScheduler()
-        self.clip = clip
-        self.backend = get_backend(step_backend)
-        self.samplers = dict(samplers) if samplers is not None \
-            else default_samplers(sched.T)
+        self.clip = cfg.clip
+        self.backend = get_backend(cfg.step_backend)
+        self.ticks_per_dispatch = cfg.ticks_per_dispatch
+        self.async_depth = cfg.async_depth
+        self.samplers = dict(cfg.samplers) if cfg.samplers is not None \
+            else default_samplers(self.sched.T)
         for name, s in self.samplers.items():
-            assert s.trajectory.T == sched.T, \
+            assert s.trajectory.T == self.sched.T, \
                 f"sampler {name!r} built for T={s.trajectory.T}, " \
-                f"engine schedule has T={sched.T}"
+                f"engine schedule has T={self.sched.T}"
         if isinstance(self.scheduler, CutRatioScheduler):
             if self.scheduler.samplers is None:
                 self.scheduler.samplers = self.samplers
@@ -166,20 +253,31 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         # engine and scheduler must share ONE policy: the scheduler gates
         # at select, the engine derives slot `end` counters / FLOPs from
         # the same cached decisions
+        admission = cfg.admission
         if admission is None:
             admission = getattr(self.scheduler, "admission", None)
         self.admission = admission
         if admission is not None:
-            assert admission.sched.T == sched.T, \
+            assert admission.sched.T == self.sched.T, \
                 f"admission policy calibrated for T={admission.sched.T}, " \
-                f"engine schedule has T={sched.T}"
+                f"engine schedule has T={self.sched.T}"
             admission.bind(
-                server_fn=functools.partial(apply_fn, server_params),
+                server_fn=functools.partial(self.apply_fn, server_params),
                 samplers=self.samplers)
             if self.scheduler.admission is None:
                 self.scheduler.admission = admission
             assert self.scheduler.admission is admission, \
                 "engine and scheduler must share one AdmissionPolicy"
+        # ---- pod-mode lane ownership ------------------------------------
+        from repro.parallel import sharding as shd
+        self.hosts = cfg.hosts
+        if cfg.hosts > 1:
+            self.host_id = cfg.host_id if cfg.host_id is not None \
+                else jax.process_index()
+        else:
+            self.host_id = cfg.host_id or 0
+        self._lane_owned = \
+            shd.lane_owners(self.slots, self.hosts) == self.host_id
         # hoisted out of the tick: every registered trajectory's (4, K)
         # coefficient table concatenated column-wise (gathered per-lane in
         # SMEM by the fused kernel), plus the per-trajectory column offset,
@@ -189,7 +287,7 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         lens = [s.K for s in menu]
         kmax = max(lens)
         self._kmax = kmax
-        self._tables = jnp.concatenate([s.tables(sched) for s in menu],
+        self._tables = jnp.concatenate([s.tables(self.sched) for s in menu],
                                        axis=1)
         self._offsets = jnp.asarray(
             np.cumsum([0] + lens[:-1]), jnp.int32)
@@ -197,22 +295,42 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
             [list(s.trajectory.timesteps) + [1] * (kmax - s.K)
              for s in menu], jnp.int32)
         self._masked_index = functools.partial(
-            self.backend.masked_index_step, tables=self._tables, clip=clip)
-        self.mesh = mesh
+            self.backend.masked_index_step, tables=self._tables,
+            clip=self.clip)
+        # the ONE lane tick both the k-scan window and the client finisher
+        # run — see repro.diffusion.backend.make_lane_tick for the
+        # done-latching contract the scan boundary relies on
+        self._lane_tick = make_lane_tick(
+            self.apply_fn, self._masked_index, self._offsets, self._ts_pad,
+            kmax, self.image_shape)
+        # per-request key derivation, jitted per batch size: the eager
+        # vmapped fold_in/split trace costs ~5ms per ADMISSION, which at
+        # pod scale (hundreds of in-flight requests) would dwarf the
+        # denoise compute itself
+        self._lane_keys = jax.jit(collafuse.lane_keys,
+                                  static_argnums=(1,))
+        self.mesh = cfg.mesh
         n_params = sum(x.size for x in jax.tree.leaves(server_params))
         # forward-only proxy (inference): ~2 FLOP per param per call
-        self.flops_per_call = (flops_per_call if flops_per_call is not None
+        self.flops_per_call = (cfg.flops_per_call
+                               if cfg.flops_per_call is not None
                                else 2.0 * n_params)
         self._slot_shardings = None
-        if mesh is not None:
+        self._done_sharding = None
+        if cfg.mesh is not None:
             from repro.models.layers import ShardCtx
-            from repro.parallel import sharding as shd
-            ctx = ShardCtx(mesh=mesh,
-                           batch_axes=tuple(a for a in mesh.axis_names
+            ctx = ShardCtx(mesh=cfg.mesh,
+                           batch_axes=tuple(a for a in cfg.mesh.axis_names
                                             if a in ("pod", "data")))
             self._slot_shardings = shd.to_shardings(
-                shd.slot_specs(jax.eval_shape(self._init_state), ctx), mesh)
-        self._tick = jax.jit(self._make_tick(), donate_argnums=(0,))
+                shd.slot_specs(jax.eval_shape(self._init_state), ctx),
+                cfg.mesh)
+            self._done_sharding = shd.gathered_sharding(cfg.mesh)
+        # async_depth > 1 holds window N's x/done refs while window N+1
+        # computes, so the slot state cannot be donated to the dispatch;
+        # the synchronous depth keeps the old zero-copy behaviour
+        donate = (0,) if self.async_depth == 1 else ()
+        self._tick = jax.jit(self._make_tick(), donate_argnums=donate)
         self._finish = jax.jit(self._make_finish())
 
     # ------------------------------------------------------------------
@@ -233,41 +351,35 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         return state
 
     def _make_tick(self):
-        shape = self.image_shape
-        offsets, ts_pad, kmax = self._offsets, self._ts_pad, self._kmax
+        """The k-tick fused window: ``ticks_per_dispatch`` masked lane
+        ticks under ONE ``lax.scan``.  Lanes reaching their cut latch
+        (active drops, the carry holds bitwise — the shared lane tick's
+        passthrough), so the boundary state carries every mid-window cut
+        tensor exactly.  Returns the boundary state plus the (k, slots)
+        per-tick done stack; under a mesh the stack is constrained
+        REPLICATED so every pod host reads it with a local np.asarray."""
+        k = self.ticks_per_dispatch
 
-        def tick(state, params):
-            # masked trajectory step: every live lane executes ITS next
-            # trajectory position in ONE program (per-lane column gather
-            # into the concatenated sampler tables); retired/empty lanes
-            # ride along untouched
-            stepping = state["active"] & (state["pos"] < state["end"])
-            pos_c = jnp.clip(state["pos"], 0, kmax - 1)
-            t_lane = ts_pad[state["traj"], pos_c]    # model conditions on t
-            eps_hat = self.apply_fn(params, state["x"], t_lane)
-            ks = jax.vmap(jax.random.split)(state["key"])
-            k_next, k_n = ks[:, 0], ks[:, 1]
-            noise = jax.vmap(
-                lambda k: jax.random.normal(k, shape, jnp.float32))(k_n)
-            cols = offsets[state["traj"]] + pos_c
-            x = self._masked_index(state["x"], cols, eps_hat, noise,
-                                   stepping)
-            pos = jnp.where(stepping, state["pos"] + 1, state["pos"])
-            key = jnp.where(stepping[:, None], k_next, state["key"])
-            done = stepping & (pos >= state["end"])  # now holds x at the cut
-            new = {"x": x, "pos": pos, "end": state["end"],
-                   "traj": state["traj"], "key": key,
-                   "active": state["active"] & ~done}
-            if self._slot_shardings is not None:
-                new = jax.lax.with_sharding_constraint(new,
-                                                       self._slot_shardings)
-            return new, done
-        return tick
+        def window(state, params):
+            def body(st, _):
+                x, pos, key, done = self._lane_tick(
+                    params, st["x"], st["pos"], st["key"], st["end"],
+                    st["traj"], st["active"])
+                new = {"x": x, "pos": pos, "end": st["end"],
+                       "traj": st["traj"], "key": key,
+                       "active": st["active"] & ~done}
+                if self._slot_shardings is not None:
+                    new = jax.lax.with_sharding_constraint(
+                        new, self._slot_shardings)
+                return new, done
+            state, done_seq = jax.lax.scan(body, state, None, length=k)
+            if self._done_sharding is not None:
+                done_seq = jax.lax.with_sharding_constraint(
+                    done_seq, self._done_sharding)
+            return state, done_seq
+        return window
 
     def _make_finish(self):
-        shape = self.image_shape
-        offsets, ts_pad, kmax = self._offsets, self._ts_pad, self._kmax
-
         def finish(client_stack, x, pos, end, traj, keys, valid):
             # lanes arrive GROUPED BY CLIENT: leading axis = client, second
             # = (padded) lanes of that client.  vmap pairs each client's
@@ -279,19 +391,8 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
             def per_client(params, xg, pg, eg, tg, kg, vg):
                 def body(_, carry):
                     xc, p, key = carry
-                    act = vg & (p < eg)
-                    p_c = jnp.clip(p, 0, kmax - 1)
-                    t_l = ts_pad[tg, p_c]
-                    eps = self.apply_fn(params, xc, t_l)
-                    ks = jax.vmap(jax.random.split)(key)
-                    k_next, k_n = ks[:, 0], ks[:, 1]
-                    noise = jax.vmap(
-                        lambda k: jax.random.normal(k, shape,
-                                                    jnp.float32))(k_n)
-                    cols = offsets[tg] + p_c
-                    xc = self._masked_index(xc, cols, eps, noise, act)
-                    p = jnp.where(act, p + 1, p)
-                    key = jnp.where(act[:, None], k_next, key)
+                    xc, p, key, _ = self._lane_tick(
+                        params, xc, p, key, eg, tg, vg)
                     return (xc, p, key)
                 # traced bound -> one while-program shared by every cut mix
                 xo, _, _ = jax.lax.fori_loop(0, n_steps, body, (xg, pg, kg))
@@ -337,37 +438,121 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         cut = self._effective_cut(req)
         return cut, self._sampler_of(req).K - cut
 
-    def _admit(self, state, req: Request, lanes: List[int], now: int,
-               inflight: Dict, lane_req: np.ndarray, lane_img: np.ndarray,
-               metrics: ServeMetrics):
-        k_init, k_srv, k_cli = collafuse.lane_keys(req.key, req.batch)
-        x_T = jax.vmap(
-            lambda k: jax.random.normal(k, self.image_shape, jnp.float32))(
-                k_init)
-        idx = jnp.asarray(lanes)
-        state = {
-            "x": state["x"].at[idx].set(x_T),
-            "pos": state["pos"].at[idx].set(0),
-            "end": state["end"].at[idx].set(self._effective_cut(req)),
-            "traj": state["traj"].at[idx].set(self._traj_ids[req.sampler]),
-            "key": state["key"].at[idx].set(k_srv),
-            "active": state["active"].at[idx].set(True),
-        }
+    def _admit_host(self, req: Request, lanes: List[int], now: int,
+                    inflight: Dict, lane_req: np.ndarray,
+                    lane_img: np.ndarray, metrics: ServeMetrics):
+        """Host-side bookkeeping for one admitted request; returns its
+        (k_init, k_srv) key rows for the boundary's batched slot write."""
+        k_init, k_srv, k_cli = self._lane_keys(req.key, req.batch)
         lane_req[lanes] = req.req_id
         lane_img[lanes] = np.arange(req.batch)
         inflight[req.req_id] = {
             "request": req, "remaining": req.batch, "admit_tick": now,
             "k_cli": np.asarray(k_cli),
             "x_mid": np.zeros((req.batch,) + self.image_shape, np.float32),
+            "owned": np.zeros((req.batch,), bool),
         }
         metrics.on_admit(req.req_id, now)
-        return state
+        return k_init, k_srv
 
-    def run(self, requests: List[Request],
-            max_ticks: Optional[int] = None) -> ServeResult:
-        """Serve the SERVER segment of every request: admit from the queue,
-        tick until drained, retire x at the cut per request.  Completions
-        carry ``x_mid`` only; :meth:`serve` adds the client finish.
+    def _admit_device(self, state, admits):
+        """ONE batched slot-array refill for every request admitted at
+        this window boundary: 6 device updates per BOUNDARY instead of 6
+        per request (at pod scale — hundreds of in-flight requests — the
+        per-request eager updates dominate wall time, not the denoise
+        compute).  Lane values are identical to per-request admission:
+        disjoint lanes, and the vmapped per-lane x_T draw is elementwise
+        over the concatenated key rows — bitwise the same x_T."""
+        lanes = np.concatenate([np.asarray(ln, np.int32)
+                                for _, ln, _, _ in admits])
+        k_init = jnp.concatenate([ki for _, _, ki, _ in admits])
+        k_srv = jnp.concatenate([ks for _, _, _, ks in admits])
+        ends = np.concatenate(
+            [np.full(req.batch, self._effective_cut(req), np.int32)
+             for req, _, _, _ in admits])
+        trajs = np.concatenate(
+            [np.full(req.batch, self._traj_ids[req.sampler], np.int32)
+             for req, _, _, _ in admits])
+        x_T = jax.vmap(
+            lambda k: jax.random.normal(k, self.image_shape, jnp.float32))(
+                k_init)
+        idx = jnp.asarray(lanes)
+        return {
+            "x": state["x"].at[idx].set(x_T),
+            "pos": state["pos"].at[idx].set(0),
+            "end": state["end"].at[idx].set(jnp.asarray(ends)),
+            "traj": state["traj"].at[idx].set(jnp.asarray(trajs)),
+            "key": state["key"].at[idx].set(k_srv),
+            "active": state["active"].at[idx].set(True),
+        }
+
+    def _host_rows(self, arr, lanes: List[int]) -> Dict[int, np.ndarray]:
+        """Materialize ``arr[lane]`` for the lanes THIS host owns.
+
+        Off-pod (or simulated hosts in one process) the array is fully
+        addressable and one gather serves all owned lanes.  Under a real
+        multi-process ``jax.distributed`` run the slot axis is sharded
+        across processes, so each host walks its ADDRESSABLE shards and
+        copies only the owned rows they cover — zero cross-host traffic
+        for the (k·slots·image)-sized tensors (only the bool done stack is
+        gathered)."""
+        owned = [ln for ln in lanes if self._lane_owned[ln]]
+        if not owned:
+            return {}
+        if getattr(arr, "is_fully_addressable", True):
+            vals = np.asarray(
+                jnp.take(arr, jnp.asarray(owned, jnp.int32), axis=0))
+            return {ln: vals[j] for j, ln in enumerate(owned)}
+        out: Dict[int, np.ndarray] = {}
+        for shard in arr.addressable_shards:
+            sl = shard.index[0]
+            start = sl.start or 0
+            stop = sl.stop if sl.stop is not None else arr.shape[0]
+            hit = [ln for ln in owned if start <= ln < stop]
+            if hit:
+                data = np.asarray(shard.data)
+                for ln in hit:
+                    out[ln] = data[ln - start]
+        return out
+
+    def _sync_window(self, win, inflight, lane_req, lane_img, completions,
+                     metrics) -> None:
+        """Block on ONE in-flight window's done stack and run its retire
+        bookkeeping.  ``retire_tick`` is the window BOUNDARY (start + k);
+        the per-tick stack recovers each lane's exact finish for the
+        boundary-lag metric (≤ k-1 by construction)."""
+        done_seq, x_ref, start = win
+        done_np = np.asarray(done_seq)           # (k, slots); blocks here
+        k = done_np.shape[0]
+        boundary = start + k
+        lanes = np.nonzero(done_np.any(axis=0))[0]
+        if not lanes.size:
+            return
+        first = done_np.argmax(axis=0)           # first done tick per lane
+        rows = self._host_rows(x_ref, lanes.tolist())
+        for lane in lanes.tolist():
+            metrics.on_boundary_lag(int(k - 1 - first[lane]))
+            rec = inflight[int(lane_req[lane])]
+            img = int(lane_img[lane])
+            if lane in rows:
+                rec["x_mid"][img] = rows[lane]
+                rec["owned"][img] = True
+            rec["remaining"] -= 1
+            if rec["remaining"] == 0:
+                r = rec["request"]
+                metrics.on_retire(r.req_id, boundary)
+                completions[r.req_id] = Completion(
+                    request=r, x_mid=rec["x_mid"],
+                    admit_tick=rec["admit_tick"], retire_tick=boundary,
+                    k_cli=rec["k_cli"], owned=rec["owned"])
+            lane_req[lane] = lane_img[lane] = -1
+
+    def _serve_server(self, requests: List[Request],
+                      max_ticks: Optional[int] = None) -> ServeResult:
+        """Server segment of every request: admit from the queue, dispatch
+        k-tick scan windows (up to ``async_depth`` in flight), retire at
+        window boundaries until drained.  Completions carry ``x_mid``
+        only; :meth:`serve` adds the client finish.
 
         Under a KID gate every request gets an :class:`AdmissionDecision`
         (surfaced in ``ServeResult.decisions``): to-be-rejected requests
@@ -375,6 +560,7 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         select gate — they never occupy a slot and have no completion."""
         assert len({r.req_id for r in requests}) == len(requests), \
             "duplicate req_ids: completions/inflight are keyed by req_id"
+        k = self.ticks_per_dispatch
         decisions: Dict[int, AdmissionDecision] = {}
         for r in requests:
             assert r.batch <= self.slots, \
@@ -390,10 +576,10 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         # zero-server-step requests (cut position 0, e.g. c=1 — or bumped
         # all the way to full concealment) complete at arrival (x_mid =
         # x_T) without ever occupying a slot
-        local_only = sorted(
+        local_only = collections.deque(sorted(
             (r for r in requests
              if _served(r) and self._effective_cut(r) == 0),
-            key=lambda r: r.arrival_tick)
+            key=lambda r: r.arrival_tick))
         for r in requests:
             if not _served(r):
                 self.scheduler.add(r)   # dropped at the select gate below
@@ -403,13 +589,23 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
             span = max((r.arrival_tick for r in requests), default=0)
             total = sum(self._effective_cut(r) for r in requests
                         if _served(r))
-            max_ticks = span + total + self._kmax + 16   # liveness bound
+            # liveness bound: serving work + per-request window overhead
+            # (a lane can idle up to k·async_depth ticks between reaching
+            # its cut and its boundary sync freeing the slot)
+            overhead = k * (self.async_depth + 1)
+            max_ticks = span + total + self._kmax + 16 + \
+                overhead * max(1, len(requests))
 
         state = self._init_state()
         lane_req = np.full(self.slots, -1, np.int64)
         lane_img = np.full(self.slots, -1, np.int64)
         inflight: Dict[int, Dict] = {}
         completions: Dict[int, Completion] = {}
+        # in-flight scan windows, oldest first: (done_seq devicearray,
+        # boundary-state x ref, start tick).  Retired lanes hold x bitwise
+        # in every LATER window, but pairing each done stack with its own
+        # boundary x means syncing window N never blocks on window N+1.
+        pending: collections.deque = collections.deque()
         metrics = ServeMetrics(self.slots)
         metrics.start()
         t0 = time.perf_counter()
@@ -417,56 +613,65 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
 
         def drain_local(now):
             while local_only and local_only[0].arrival_tick <= now:
-                r = local_only.pop(0)
-                k_init, _, k_cli = collafuse.lane_keys(r.key, r.batch)
+                r = local_only.popleft()
+                k_init, _, k_cli = self._lane_keys(r.key, r.batch)
                 x_T = jax.vmap(lambda k: jax.random.normal(
                     k, self.image_shape, jnp.float32))(k_init)
                 metrics.on_admit(r.req_id, now)
                 metrics.on_retire(r.req_id, now)
                 completions[r.req_id] = Completion(
                     request=r, x_mid=np.asarray(x_T), admit_tick=now,
-                    retire_tick=now, k_cli=np.asarray(k_cli))
+                    retire_tick=now, k_cli=np.asarray(k_cli),
+                    owned=np.ones((r.batch,), bool))
+
+        def sync_oldest():
+            self._sync_window(pending.popleft(), inflight, lane_req,
+                              lane_img, completions, metrics)
 
         while True:
             drain_local(now)
-            # ---- admission: refill freed slots from the queue -----------
+            # ---- admission: refill freed slots at the window boundary ---
             free = np.nonzero(lane_req < 0)[0].tolist()
-            for req in self.scheduler.select(len(free), now):
+            admits = []
+            for req in self.scheduler.select_window(len(free), now, k):
                 lanes, free = free[:req.batch], free[req.batch:]
-                state = self._admit(state, req, lanes, now, inflight,
-                                    lane_req, lane_img, metrics)
+                ki, ks = self._admit_host(req, lanes, now, inflight,
+                                          lane_req, lane_img, metrics)
+                admits.append((req, lanes, ki, ks))
+            if admits:
+                state = self._admit_device(state, admits)
             n_active = int((lane_req >= 0).sum())
             if n_active == 0:
+                if pending:
+                    # host thinks nothing is live but windows are in
+                    # flight: their retires are what frees lanes
+                    sync_oldest()
+                    continue
                 if len(self.scheduler) == 0 and not local_only:
                     break
-                # idle: jump to the next arrival instead of spinning
+                # idle: jump to the next arrival instead of spinning —
+                # recorded, not silent
                 nxt = [self.scheduler.next_arrival()]
                 if local_only:
                     nxt.append(local_only[0].arrival_tick)
-                now = max(now + 1, min(t for t in nxt if t is not None))
+                target = max(now + 1, min(t for t in nxt if t is not None))
+                metrics.on_idle_gap(target - (now + 1))
+                now = target
+                if now > max_ticks:
+                    raise RuntimeError(
+                        f"engine exceeded liveness bound ({max_ticks} "
+                        f"ticks) with {len(self.scheduler)} queued / 0 "
+                        "in-flight — scheduler starvation?")
                 continue
-            # ---- ONE dispatch steps every in-flight lane ----------------
-            state, done = self._tick(state, self.server_params)
-            metrics.on_tick(n_active)
-            now += 1
-            # ---- retire lanes that reached their t_split ----------------
-            done_np = np.asarray(done)
-            done_lanes = np.nonzero(done_np)[0]
-            if done_lanes.size:
-                x_done = np.asarray(
-                    jnp.take(state["x"], jnp.asarray(done_lanes), axis=0))
-                for j, lane in enumerate(done_lanes.tolist()):
-                    rec = inflight[int(lane_req[lane])]
-                    rec["x_mid"][lane_img[lane]] = x_done[j]
-                    rec["remaining"] -= 1
-                    if rec["remaining"] == 0:
-                        r = rec["request"]
-                        metrics.on_retire(r.req_id, now)
-                        completions[r.req_id] = Completion(
-                            request=r, x_mid=rec["x_mid"],
-                            admit_tick=rec["admit_tick"], retire_tick=now,
-                            k_cli=rec["k_cli"])
-                    lane_req[lane] = lane_img[lane] = -1
+            # ---- ONE dispatch runs k fused ticks over every lane --------
+            state, done_seq = self._tick(state, self.server_params)
+            pending.append((done_seq, state["x"], now))
+            metrics.on_window(n_active, k)
+            now += k
+            # ---- drain the pipeline down to async_depth - 1 windows -----
+            # (async_depth=1: block right here — the synchronous loop)
+            while len(pending) >= self.async_depth:
+                sync_oldest()
             if now > max_ticks:
                 raise RuntimeError(
                     f"engine exceeded liveness bound ({max_ticks} ticks) "
@@ -486,11 +691,13 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         summary = metrics.summary(wall, self.sched.T, self.flops_per_call,
                                   requests, steps_of=self._steps_of,
                                   decisions=decisions or None)
+        summary["ticks_per_dispatch"] = k
+        summary["async_depth"] = self.async_depth
         return ServeResult(completions=completions, summary=summary,
                            wall_s=wall, decisions=decisions)
 
     # ------------------------------------------------------------------
-    def finish_clients(self, result: ServeResult, client_stack) -> None:
+    def _finish_clients(self, result: ServeResult, client_stack) -> None:
         """Complete the remaining trajectory positions for every emitted
         image under its client's private model — ONE masked program, lanes
         grouped by ``client_idx`` (compacted to the clients present, padded
@@ -498,7 +705,7 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         param row with no per-lane stack gather.  Padding lanes ride the
         loop masked (they pay model FLOPs but no param traffic); heavily
         skewed per-client traffic bounds the waste at n_present x widest.
-        Fills ``Completion.x0`` in place."""
+        Fills ``Completion.x0`` in place and flips ``client_finished``."""
         order = sorted(result.completions)
         if not order:
             return
@@ -539,10 +746,10 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
         keys = np.zeros(shp + (2,), np.uint32)
         valid = np.zeros(shp, bool)
         for ci, g in enumerate(groups):
-            for j, (rid, i, xm, cut, K, tid, k) in enumerate(g):
+            for j, (rid, i, xm, cut, K, tid, kk) in enumerate(g):
                 x[ci, j] = xm
                 pos[ci, j], end[ci, j], traj[ci, j] = cut, K, tid
-                keys[ci, j] = k
+                keys[ci, j] = kk
                 valid[ci, j] = True
         x0 = np.asarray(self._finish(
             stack_used, jnp.asarray(x), jnp.asarray(pos),
@@ -556,14 +763,24 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
                 outs[rid][i] = x0[ci, j]
         for rid in order:
             result.completions[rid].x0 = outs[rid]
+            result.completions[rid].client_finished = True
 
     def serve(self, requests: List[Request], client_stack=None,
               max_ticks: Optional[int] = None) -> ServeResult:
-        """run() + client finish (when a client stack is supplied)."""
-        result = self.run(requests, max_ticks=max_ticks)
+        """THE entrypoint: serve the server segment of ``requests`` and —
+        when ``client_stack`` ([n_clients, ...] stacked private models) is
+        supplied — finish every completion's client segment.
+
+        Returns a :class:`ServeResult`: ``completions[req_id].x_mid`` is
+        the disclosed tensor at the cut, ``.x0`` the finished images (None
+        unless the client finish ran — check ``.client_finished``), and
+        ``decisions`` the per-request admission record under a KID gate.
+        ``max_ticks`` overrides the liveness bound (None derives it from
+        the workload and the scan/async depths)."""
+        result = self._serve_server(requests, max_ticks=max_ticks)
         if client_stack is not None:
             t0 = time.perf_counter()
-            self.finish_clients(result, client_stack)
+            self._finish_clients(result, client_stack)
             finish_s = time.perf_counter() - t0
             result.wall_s += finish_s
             s = result.summary
@@ -572,18 +789,29 @@ AdmissionPolicy` — the KID gate: each request's disclosure is scored
             s["images_per_s"] = s["images"] / max(result.wall_s, 1e-9)
         return result
 
+    # -- deprecated three-call surface (one release) --------------------
+    def run(self, requests: List[Request],
+            max_ticks: Optional[int] = None) -> ServeResult:
+        """Deprecated: call :meth:`serve` (without a client stack) — the
+        server segment is the same code path."""
+        warnings.warn("ServeEngine.run() is deprecated; call serve()",
+                      DeprecationWarning, stacklevel=2)
+        return self._serve_server(requests, max_ticks=max_ticks)
+
+    def finish_clients(self, result: ServeResult, client_stack) -> None:
+        """Deprecated: pass ``client_stack`` to :meth:`serve` instead."""
+        warnings.warn("ServeEngine.finish_clients() is deprecated; pass "
+                      "client_stack to serve()",
+                      DeprecationWarning, stacklevel=2)
+        self._finish_clients(result, client_stack)
+
 
 # ---------------------------------------------------------------------------
 # sequential reference service (the benchmark baseline)
 # ---------------------------------------------------------------------------
-def serve_sequential(sched: DiffusionSchedule, requests: List[Request],
+def _sequential_impl(sched: DiffusionSchedule, requests: List[Request],
                      server_fn: Callable, client_fn_for: Callable,
                      image_shape, samplers=None) -> Dict[int, Any]:
-    """One ``split_sample`` call per request, in arrival order — the
-    pre-engine serving path (O(requests) dispatch chains).  Used as the
-    throughput baseline for the ≥3x continuous-batching gate.  ``samplers``
-    (a {name: Sampler} menu, as on :class:`ServeEngine`) resolves each
-    request's trajectory; absent, every request walks the dense chain."""
     outs = {}
     for r in sorted(requests, key=lambda r: (r.arrival_tick, r.req_id)):
         plan = CutPlan(sched.T, r.cut_ratio)
@@ -597,6 +825,33 @@ def serve_sequential(sched: DiffusionSchedule, requests: List[Request],
     return outs
 
 
+def serve_sequential(config, requests: List[Request], *args,
+                     samplers=None) -> Dict[int, Any]:
+    """One ``split_sample`` call per request, in arrival order — the
+    pre-engine serving path (O(requests) dispatch chains).  Used as the
+    throughput baseline for the ≥3x continuous-batching gate.
+
+    Preferred form — the SAME config the engine takes, so baselines and
+    engine cannot drift apart in wiring::
+
+        serve_sequential(EngineConfig(...), requests, server_params,
+                         client_stack)
+
+    Legacy form ``serve_sequential(sched, requests, server_fn,
+    client_fn_for, image_shape, samplers=...)`` still works for callers
+    holding bare functions."""
+    if isinstance(config, EngineConfig):
+        server_params, client_stack = args
+        server_fn, client_fn_for = sequential_fns(
+            config.apply_fn, server_params, client_stack)
+        return _sequential_impl(config.sched, requests, server_fn,
+                                client_fn_for, config.image_shape,
+                                samplers=config.samplers)
+    server_fn, client_fn_for, image_shape = args
+    return _sequential_impl(config, requests, server_fn, client_fn_for,
+                            image_shape, samplers=samplers)
+
+
 def sequential_fns(apply_fn, server_params, client_stack):
     """(server_fn, client_fn_for) partials over a stacked client tree —
     the model plumbing both callers of :func:`serve_sequential` need."""
@@ -607,16 +862,14 @@ def sequential_fns(apply_fn, server_params, client_stack):
     return server_fn, client_fn_for
 
 
-def time_sequential(sched: DiffusionSchedule, requests: List[Request],
-                    server_fn: Callable, client_fn_for: Callable,
-                    image_shape, samplers=None) -> float:
+def time_sequential(config, requests: List[Request], *args,
+                    samplers=None) -> float:
     """Warmup pass + timed wall-clock of the sequential baseline.  Shared
     by ``launch/serve_diffusion.py --compare-sequential`` and the gated
     ``benchmarks.run --only serve_continuous`` so the baseline protocol
-    cannot drift between the launcher and the benchmark."""
-    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape,
-                     samplers=samplers)
+    cannot drift between the launcher and the benchmark.  Accepts the
+    same two forms as :func:`serve_sequential`."""
+    serve_sequential(config, requests, *args, samplers=samplers)
     t0 = time.perf_counter()
-    serve_sequential(sched, requests, server_fn, client_fn_for, image_shape,
-                     samplers=samplers)
+    serve_sequential(config, requests, *args, samplers=samplers)
     return time.perf_counter() - t0

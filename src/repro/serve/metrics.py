@@ -29,6 +29,9 @@ class ServeMetrics:
         self._retire: Dict[int, Dict] = {}
         self._util: List[float] = []            # active lanes / capacity
         self._t0: Optional[float] = None
+        self._windows = 0                       # fused-dispatch count
+        self._idle_ticks = 0                    # ticks skipped while empty
+        self._lags: List[int] = []              # retire boundary - exact tick
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -44,7 +47,31 @@ class ServeMetrics:
         self._retire[req_id] = {"tick": tick, "wall": self._now()}
 
     def on_tick(self, active_lanes: int) -> None:
-        self._util.append(active_lanes / max(self.capacity, 1))
+        self.on_window(active_lanes, 1)
+
+    def on_window(self, active_lanes: int, ticks: int) -> None:
+        """One fused dispatch of ``ticks`` scan ticks with ``active_lanes``
+        lanes live at the window start.  Utilization is sampled per TICK
+        (the host only knows the window-start count — lanes finishing
+        mid-window are still counted, which is exactly the occupancy the
+        device paid for)."""
+        self._windows += 1
+        self._util.extend([active_lanes / max(self.capacity, 1)] * ticks)
+
+    def on_idle_gap(self, gap: int) -> None:
+        """Ticks the engine SKIPPED because no lane was in flight (it
+        jumps ``now`` to the next arrival instead of spinning) — recorded
+        so the jump is visible in the summary instead of silent."""
+        if gap > 0:
+            self._idle_ticks += gap
+
+    def on_boundary_lag(self, lag: int) -> None:
+        """Retirement happens at the scan-window boundary; ``lag`` is how
+        many ticks earlier the lane actually reached its cut (exact finish
+        read back from the per-tick done stack).  Bounded by
+        ticks_per_dispatch - 1 by construction — asserted p100 in
+        tests/test_serve.py."""
+        self._lags.append(lag)
 
     # ------------------------------------------------------------------
     @property
@@ -111,6 +138,9 @@ class ServeMetrics:
             "served": n_served,
             "images": images,
             "ticks": self.ticks,
+            "windows": self._windows,
+            "ticks_per_s": self.ticks / max(wall_s, 1e-9),
+            "idle_ticks": self._idle_ticks,
             # throughput counts SERVED requests only: rejected ones never
             # ran a model call (ungated, served == requests)
             "requests_per_s": n_served / max(wall_s, 1e-9),
@@ -125,6 +155,10 @@ class ServeMetrics:
             "client_flops": client_f,
             "client_fraction": client_f / total,
         }
+        if self._lags:
+            lags = np.array(self._lags, np.float64)
+            out["boundary_lag_mean"] = float(lags.mean())
+            out["boundary_lag_p100"] = int(lags.max())
         if decisions:
             out["admission"] = admission_summary(decisions.values())
         return out

@@ -95,7 +95,20 @@ class FIFOScheduler:
         return self.arrived(now)
 
     def select(self, free_slots: int, now: int) -> List[Request]:
-        """Admit in candidate order until one does not fit, which BLOCKS
+        """One-tick admission — :meth:`select_window` with window=1."""
+        return self.select_window(free_slots, now, 1)
+
+    def select_window(self, free_slots: int, now: int,
+                      window: int) -> List[Request]:
+        """Batch admission for one whole SCAN WINDOW of the serving engine:
+        the engine dispatches ``window`` fused ticks per device call and
+        can only admit/retire at window boundaries, so candidates are the
+        requests arrived by the window's START tick ``now`` — a request
+        arriving mid-window (now, now+window) waits for the next boundary
+        (bounded by window-1 ticks of extra queueing; the engine's
+        ``--ticks-per-dispatch`` latency/throughput tradeoff).
+
+        Admit in candidate order until one does not fit, which BLOCKS
         everything ranked behind it.  Blocking (rather than letting
         smaller later candidates leapfrog) is what turns each policy's
         ordering into a liveness guarantee for batch > 1 requests: once a
@@ -108,6 +121,7 @@ class FIFOScheduler:
         below the floor at every trajectory position) are dropped from the
         queue and recorded for :meth:`take_rejections`; they neither block
         nor age the candidates behind them."""
+        assert window >= 1, window
         picked, dropped = [], []
         for r in self._candidates(now):
             if self.admission is not None:

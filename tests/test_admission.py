@@ -16,8 +16,8 @@ from repro.diffusion.sampler import (Sampler, assert_same_menu,
                                      make_sampler, sample_trajectory)
 from repro.diffusion.schedule import cosine_schedule
 from repro.optim import adamw
-from repro.serve import (AdmissionPolicy, CutRatioScheduler, Request,
-                         ServeEngine, make_scheduler)
+from repro.serve import (AdmissionPolicy, CutRatioScheduler, EngineConfig,
+                         Request, ServeEngine, make_scheduler)
 
 T = 12
 K = 5
@@ -218,7 +218,9 @@ def _engine(world, pol=None, **kw):
     sched, server, _, _ = world
     kw.setdefault("slots", 4)
     kw.setdefault("samplers", _menu())
-    return ServeEngine(sched, _apply_fn, server, SHAPE, admission=pol, **kw)
+    cfg = EngineConfig(sched=sched, apply_fn=_apply_fn, image_shape=SHAPE,
+                       admission=pol, **kw)
+    return ServeEngine(cfg, server)
 
 
 def test_engine_serves_only_above_floor_and_surfaces_decisions(world, probe):

@@ -1,0 +1,150 @@
+"""EngineConfig construction-time validation + the one-release legacy
+ServeEngine kwargs shim (the ONLY file allowed to call the legacy
+signature — tools/check_engine_config.py allowlists it)."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion.sampler import make_sampler
+from repro.diffusion.schedule import cosine_schedule
+from repro.serve import AdmissionPolicy, EngineConfig, Request, ServeEngine
+
+T = 12
+SIZE = 6
+SHAPE = (SIZE, SIZE, 1)
+
+
+def _init_fn(key):
+    d = SIZE * SIZE
+    ks = jax.random.split(key, 2)
+    return {"w1": jax.random.normal(ks[0], (d + 8, 32)) / 6.0,
+            "w2": jax.random.normal(ks[1], (32, d)) / 6.0}
+
+
+def _apply_fn(p, x, t):
+    b = x.shape[0]
+    freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
+    return (h @ p["w2"]).reshape(x.shape)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return cosine_schedule(T), _init_fn(jax.random.PRNGKey(0))
+
+
+def _cfg(sched, **kw):
+    kw.setdefault("slots", 4)
+    return EngineConfig(sched=sched, apply_fn=_apply_fn, image_shape=SHAPE,
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# validation happens at EngineConfig construction, not first dispatch
+# ---------------------------------------------------------------------------
+def test_config_is_frozen_and_canonicalizes_shape(world):
+    sched, _ = world
+    cfg = _cfg(sched)
+    assert cfg.image_shape == SHAPE and isinstance(cfg.image_shape, tuple)
+    cfg2 = EngineConfig(sched=sched, apply_fn=_apply_fn,
+                        image_shape=list(SHAPE))
+    assert cfg2.image_shape == SHAPE
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.slots = 8
+
+
+@pytest.mark.parametrize("bad", [{"slots": 0},
+                                 {"ticks_per_dispatch": 0},
+                                 {"ticks_per_dispatch": 513},
+                                 {"async_depth": 0},
+                                 {"async_depth": 33},
+                                 {"hosts": 0},
+                                 {"slots": 6, "hosts": 4},
+                                 {"hosts": 2, "host_id": 2},
+                                 {"hosts": 2, "host_id": -1}])
+def test_config_rejects_bad_knobs(world, bad):
+    sched, _ = world
+    with pytest.raises(AssertionError):
+        _cfg(sched, **bad)
+
+
+def test_config_rejects_menu_built_for_other_schedule(world):
+    sched, _ = world
+    with pytest.raises(AssertionError, match="T=16"):
+        _cfg(sched, samplers={"ddpm": make_sampler(16)})
+
+
+def test_config_rejects_admission_calibrated_for_other_schedule(world):
+    sched, server = world
+    other = cosine_schedule(T + 4)
+    calib = jnp.tanh(jax.random.normal(jax.random.PRNGKey(5), (4,) + SHAPE))
+    pol = AdmissionPolicy(other, calib, min_kid=float("-inf"),
+                          samplers={"ddpm": make_sampler(T + 4)},
+                          server_fn=functools.partial(_apply_fn, server))
+    with pytest.raises(AssertionError, match="calibrated for"):
+        _cfg(sched, admission=pol)
+
+
+def test_engine_rejects_extra_args_on_config_path(world):
+    sched, server = world
+    with pytest.raises(TypeError, match="no\\s+further arguments"):
+        ServeEngine(_cfg(sched), server, slots=8)
+
+
+def test_replace_builds_k_variant(world):
+    """`dataclasses.replace` is the supported way to derive scan/async
+    variants (the pod_ticks benchmark does exactly this)."""
+    sched, _ = world
+    cfg = _cfg(sched)
+    hot = dataclasses.replace(cfg, ticks_per_dispatch=8, async_depth=2)
+    assert (hot.ticks_per_dispatch, hot.async_depth) == (8, 2)
+    assert cfg.ticks_per_dispatch == 1      # original untouched
+
+
+# ---------------------------------------------------------------------------
+# legacy shim: warns, and builds the identical engine
+# ---------------------------------------------------------------------------
+def test_legacy_kwargs_shim_warns_and_matches_config_path(world):
+    sched, server = world
+    reqs = lambda: [Request(req_id=0, key=jax.random.PRNGKey(3), batch=2,
+                            cut_ratio=0.5)]
+    ref = ServeEngine(_cfg(sched), server).serve(reqs())
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServeEngine(sched, _apply_fn, server, SHAPE, slots=4)
+    assert legacy.config == _cfg(sched)
+    res = legacy.serve(reqs())
+    np.testing.assert_array_equal(res.completions[0].x_mid,
+                                  ref.completions[0].x_mid)
+
+
+def test_legacy_shim_rejects_malformed_positional(world):
+    sched, server = world
+    with pytest.raises(TypeError, match="legacy signature"):
+        with pytest.warns(DeprecationWarning):
+            ServeEngine(sched, _apply_fn, server)
+
+
+def test_run_and_finish_clients_deprecated(world):
+    from repro.optim import adamw
+    sched, server = world
+    stack = adamw.tree_stack(
+        [_init_fn(k) for k in jax.random.split(jax.random.PRNGKey(1), 2)])
+    eng = ServeEngine(_cfg(sched), server)
+    req = Request(req_id=0, key=jax.random.PRNGKey(4), cut_ratio=0.5)
+    with pytest.warns(DeprecationWarning, match="serve\\(\\)"):
+        res = eng.run([req])
+    assert not res.completions[0].client_finished
+    with pytest.warns(DeprecationWarning, match="client_stack"):
+        eng.finish_clients(res, stack)
+    assert res.completions[0].client_finished
+    # serve() marks the finish in one call
+    res2 = ServeEngine(_cfg(sched), server).serve([req], stack)
+    assert res2.completions[0].client_finished
+    np.testing.assert_array_equal(res2.completions[0].x0,
+                                  res.completions[0].x0)

@@ -15,7 +15,8 @@ from repro.diffusion.sampler import (Sampler, dense_trajectory, make_sampler,
 from repro.diffusion.schedule import (ancestral_pair_coefs, cosine_schedule,
                                       ddim_pair_coefs)
 from repro.optim import adamw
-from repro.serve import CutRatioScheduler, Request, ServeEngine
+from repro.serve import (CutRatioScheduler, EngineConfig, Request,
+                         ServeEngine)
 
 T = 16
 SIZE = 6
@@ -36,6 +37,12 @@ def _apply_fn(p, x, t):
     temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
     h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
     return (h @ p["w2"]).reshape(x.shape)
+
+
+def _engine(sched, server, **kw):
+    cfg = EngineConfig(sched=sched, apply_fn=_apply_fn, image_shape=SHAPE,
+                       **kw)
+    return ServeEngine(cfg, server)
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +242,7 @@ def test_engine_strided_matches_lane_reference(models, backend):
     samplers = {"ddpm": make_sampler(T),
                 "ddim5": make_sampler(T, "ddim", 5, eta=0.0),
                 "ddim8": make_sampler(T, "ddim", 8, eta=0.6)}
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=4,
+    eng = _engine(sched, server, slots=4,
                       samplers=samplers, step_backend=backend)
     reqs = [Request(req_id=0, key=jax.random.PRNGKey(40), batch=2,
                     cut_ratio=0.5, client_idx=1, sampler="ddim5"),
@@ -272,13 +279,13 @@ def test_engine_strided_retires_in_trajectory_ticks(models):
     sched, server, _ = models
     samplers = {"ddpm": make_sampler(T),
                 "ddim4": make_sampler(T, "ddim", 4, eta=0.0)}
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2,
+    eng = _engine(sched, server, slots=2,
                       samplers=samplers)
     req = Request(req_id=0, key=jax.random.PRNGKey(50), cut_ratio=0.5,
                   sampler="ddim4")
     cut = eng._effective_cut(req)
     assert cut < CutPlan(T, 0.5).n_server_steps
-    res = eng.run([req])
+    res = eng.serve([req])
     assert res.summary["ticks"] == cut
     comp = res.completions[0]
     assert comp.retire_tick - comp.admit_tick == cut
@@ -286,10 +293,10 @@ def test_engine_strided_retires_in_trajectory_ticks(models):
 
 def test_engine_rejects_unknown_sampler(models):
     sched, server, _ = models
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2)
+    eng = _engine(sched, server, slots=2)
     bad = Request(req_id=0, key=jax.random.PRNGKey(0), sampler="nope")
     with pytest.raises(AssertionError, match="sampler"):
-        eng.run([bad])
+        eng.serve([bad])
 
 
 def test_sjf_costs_trajectory_steps_not_dense(models):
@@ -308,9 +315,9 @@ def test_sjf_costs_trajectory_steps_not_dense(models):
     # dense model would have scored them the other way around
     assert (1.0 - ddim_req.cut_ratio) * T > \
            (1.0 - dense_req.cut_ratio) * T
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=1,
+    eng = _engine(sched, server, slots=1,
                       scheduler=sch, samplers=samplers)
-    res = eng.run([dense_req, ddim_req])
+    res = eng.serve([dense_req, ddim_req])
     assert (res.completions[1].retire_tick <
             res.completions[0].retire_tick)
 
@@ -321,11 +328,11 @@ def test_engine_metrics_account_trajectory_flops(models):
     sched, server, _ = models
     samplers = {"ddpm": make_sampler(T),
                 "ddim4": make_sampler(T, "ddim", 4, eta=0.0)}
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=2,
+    eng = _engine(sched, server, slots=2,
                       samplers=samplers, flops_per_call=1.0)
     req = Request(req_id=0, key=jax.random.PRNGKey(70), cut_ratio=0.5,
                   sampler="ddim4")
-    res = eng.run([req])
+    res = eng.serve([req])
     total_calls = (res.summary["server_flops"] +
                    res.summary["client_flops"])
     n_srv, n_cli = eng._steps_of(req)
@@ -339,7 +346,7 @@ def test_finisher_groups_by_client(models):
     """Grouped finisher: multiple requests per client, uneven group sizes,
     zero-lane clients — outputs still match the per-lane reference."""
     sched, server, stack = models
-    eng = ServeEngine(sched, _apply_fn, server, SHAPE, slots=6)
+    eng = _engine(sched, server, slots=6)
     reqs = [Request(req_id=0, key=jax.random.PRNGKey(80), batch=3,
                     cut_ratio=0.5, client_idx=2),
             Request(req_id=1, key=jax.random.PRNGKey(81), batch=1,

@@ -13,8 +13,9 @@ from repro.core.collafuse import CutPlan
 from repro.diffusion import ddpm
 from repro.diffusion.schedule import cosine_schedule
 from repro.optim import adamw
-from repro.serve import (CutRatioScheduler, FIFOScheduler, Request,
-                         ServeEngine, make_scheduler, serve_sequential)
+from repro.serve import (CutRatioScheduler, EngineConfig, FIFOScheduler,
+                         Request, ServeEngine, make_scheduler,
+                         serve_sequential)
 
 T = 12
 SIZE = 6
@@ -48,7 +49,9 @@ def models():
 
 def _engine(sched, server, **kw):
     kw.setdefault("slots", 4)
-    return ServeEngine(sched, _apply_fn, server, SHAPE, **kw)
+    cfg = EngineConfig(sched=sched, apply_fn=_apply_fn, image_shape=SHAPE,
+                       **kw)
+    return ServeEngine(cfg, server)
 
 
 def _check_request_matches_reference(sched, server, stack, comp):
@@ -176,11 +179,10 @@ def test_engine_matches_sequential_split_sample_outputs(models):
     reqs = [Request(req_id=i, key=jax.random.PRNGKey(300 + i), batch=1,
                     cut_ratio=c, client_idx=i % 3)
             for i, c in enumerate((0.25, 0.5, 0.75))]
-    res = _engine(sched, server).serve(list(reqs), stack)
-    outs = serve_sequential(
-        sched, reqs, functools.partial(_apply_fn, server),
-        lambda ci: functools.partial(_apply_fn,
-                                     adamw.tree_unstack(stack, ci)), SHAPE)
+    cfg = EngineConfig(sched=sched, apply_fn=_apply_fn, image_shape=SHAPE,
+                       slots=4)
+    res = ServeEngine(cfg, server).serve(list(reqs), stack)
+    outs = serve_sequential(cfg, reqs, server, stack)
     for r in reqs:
         x0_seq, mid_seq = outs[r.req_id]
         comp = res.completions[r.req_id]
@@ -223,9 +225,9 @@ def test_cut_ratio_scheduler_prefers_short_server_jobs(models):
                 Request(req_id=1, key=jax.random.PRNGKey(501),
                         cut_ratio=0.75)]          # 3 server steps
     r_sjf = _engine(sched, server, slots=1,
-                    scheduler=CutRatioScheduler(T)).run(reqs())
+                    scheduler=CutRatioScheduler(T)).serve(reqs())
     r_fifo = _engine(sched, server, slots=1,
-                     scheduler=FIFOScheduler()).run(reqs())
+                     scheduler=FIFOScheduler()).serve(reqs())
     assert r_sjf.completions[1].retire_tick < r_sjf.completions[0].retire_tick
     assert (r_fifo.completions[0].admit_tick <
             r_fifo.completions[1].admit_tick)
@@ -304,7 +306,7 @@ def test_same_content_requests_do_not_alias_and_dup_ids_rejected(models):
                                   res.completions[1].x0)
     dups = [Request(req_id=7, key=key), Request(req_id=7, key=key)]
     with pytest.raises(AssertionError, match="duplicate req_id"):
-        _engine(sched, server).run(dups)
+        _engine(sched, server).serve(dups)
 
 
 def test_fifo_select_respects_head_of_line():
@@ -352,3 +354,180 @@ def test_slot_specs_shard_lane_axis():
     assert specs["x"] == P("data", None, None, None)
     assert specs["t"] == P("data")
     assert specs["key"] == P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# k-tick scan windows + async double-buffering (PR 6 tentpole)
+# ---------------------------------------------------------------------------
+def _mixed_menu():
+    from repro.diffusion.sampler import make_sampler
+    return {"ddpm": make_sampler(T),
+            "ddim6": make_sampler(T, "ddim", 6, eta=0.0)}
+
+
+def _mixed_reqs():
+    """Mixed DDPM/DDIM traffic, staggered arrivals, batches > 1 — more
+    lanes than slots so retire-and-refill happens at window boundaries."""
+    return [Request(req_id=i,
+                    key=jax.random.fold_in(jax.random.PRNGKey(1234), i),
+                    batch=1 + i % 2, cut_ratio=(0.25, 0.5, 0.75)[i % 3],
+                    client_idx=i % 3, arrival_tick=i % 5,
+                    sampler=("ddpm", "ddim6")[i % 2])
+            for i in range(8)]
+
+
+@pytest.fixture(scope="module")
+def gated_mixed_ref(models):
+    """(policy floor, reference ServeResult) at k=1/depth=1 with the KID
+    gate binding (floor at the ddim profile median -> some requests admit
+    at nominal, some bump or reject)."""
+    from repro.serve import AdmissionPolicy
+    sched, server, stack = models
+    calib = jnp.tanh(jax.random.normal(jax.random.PRNGKey(5), (4,) + SHAPE))
+    probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
+                            samplers=_mixed_menu(),
+                            server_fn=functools.partial(_apply_fn, server))
+    prof = probe.profile("ddim6")
+    floor = float(np.median(prof))
+    mk_pol = lambda: probe.with_min_kid(floor)
+    ref = _engine(sched, server, samplers=_mixed_menu(),
+                  admission=mk_pol()).serve(_mixed_reqs(), stack)
+    assert any(d.action != "admit" for d in ref.decisions.values()), \
+        "fixture floor must actually gate"
+    return mk_pol, ref
+
+
+@pytest.mark.parametrize("k,depth", [(4, 1), (8, 1), (4, 2), (8, 3)])
+def test_scan_async_bitwise_equal_to_sync_k1(models, gated_mixed_ref,
+                                             k, depth):
+    """The tentpole gate: k-tick scan windows and async double-buffering
+    change ONLY timing metadata — completions (x_mid AND finished x0) are
+    bitwise identical to the synchronous one-tick engine, on mixed
+    DDPM/DDIM traffic with the KID admission gate on."""
+    sched, server, stack = models
+    mk_pol, ref = gated_mixed_ref
+    res = _engine(sched, server, samplers=_mixed_menu(), admission=mk_pol(),
+                  ticks_per_dispatch=k, async_depth=depth).serve(
+                      _mixed_reqs(), stack)
+    assert set(res.completions) == set(ref.completions)
+    assert res.decisions == ref.decisions
+    for rid, comp in ref.completions.items():
+        np.testing.assert_array_equal(res.completions[rid].x_mid,
+                                      comp.x_mid, err_msg=f"x_mid {rid}")
+        np.testing.assert_array_equal(res.completions[rid].x0,
+                                      comp.x0, err_msg=f"x0 {rid}")
+    assert res.summary.get("boundary_lag_p100", 0) <= k - 1
+
+
+def test_retire_at_boundary_latency_bound(models):
+    """Retirement happens at the scan boundary: the retire tick is
+    window-aligned, overshoots the exact finish by at most k-1 ticks
+    (p100), and the done stack recovers the exact finish for metrics."""
+    sched, server, _ = models
+    k = 4
+    req = Request(req_id=0, key=jax.random.PRNGKey(77), cut_ratio=0.5)
+    cut = CutPlan(T, 0.5).n_server_steps
+    assert cut % k != 0, "pick a cut that does NOT land on a boundary"
+    res = _engine(sched, server, ticks_per_dispatch=k).serve([req])
+    comp = res.completions[0]
+    boundary = comp.retire_tick
+    assert boundary % k == 0
+    assert 0 <= boundary - cut <= k - 1
+    assert res.summary["boundary_lag_p100"] == boundary - cut
+    assert res.summary["ticks"] == boundary
+    assert res.summary["ticks_per_dispatch"] == k
+
+
+def test_idle_gap_recorded_not_silent(models):
+    """An empty engine jumps to the next arrival; the skipped ticks are
+    now surfaced in the summary instead of silently disappearing."""
+    sched, server, _ = models
+    req = Request(req_id=0, key=jax.random.PRNGKey(88), cut_ratio=0.5,
+                  arrival_tick=7)
+    res = _engine(sched, server).serve([req])
+    assert res.summary["idle_ticks"] == 6     # 1..7 jump skips 6 ticks
+    assert res.summary["ticks"] == CutPlan(T, 0.5).n_server_steps
+
+
+# ---------------------------------------------------------------------------
+# pod mode: per-host lane ownership over one shared queue (simulated hosts)
+# ---------------------------------------------------------------------------
+def test_two_simulated_hosts_partition_and_cover_all_lanes(models):
+    """Two engines replaying the same queue as pod hosts 0 and 1: each
+    materializes exactly its OWNED lanes' cut tensors, ownership is a
+    partition (every image row owned by exactly one host), and the union
+    reassembles the single-host result bitwise."""
+    sched, server, stack = models
+    reqs = lambda: [Request(req_id=i,
+                            key=jax.random.fold_in(jax.random.PRNGKey(9), i),
+                            batch=2, cut_ratio=(0.25, 0.5)[i % 2],
+                            client_idx=i % 3,
+                            sampler=("ddpm", "ddim6")[i % 2])
+                    for i in range(5)]
+    menu = _mixed_menu
+    ref = _engine(sched, server, samplers=menu()).serve(reqs(), stack)
+    hosts = [_engine(sched, server, samplers=menu(), hosts=2, host_id=h,
+                     ticks_per_dispatch=2, async_depth=2).serve(
+                         reqs(), stack)
+             for h in (0, 1)]
+    assert all(set(h.completions) == set(ref.completions) for h in hosts)
+    for rid, comp in ref.completions.items():
+        c0, c1 = hosts[0].completions[rid], hosts[1].completions[rid]
+        own0, own1 = c0.owned, c1.owned
+        assert ((own0 ^ own1).all()), f"ownership must partition req {rid}"
+        merged = np.where(own0[:, None, None, None], c0.x_mid, c1.x_mid)
+        np.testing.assert_array_equal(merged, comp.x_mid,
+                                      err_msg=f"union x_mid req {rid}")
+        # un-owned rows were never materialized on that host
+        for c in (c0, c1):
+            assert not np.any(c.x_mid[~c.owned])
+    # the single-host engine owns everything
+    assert all(c.owned.all() for c in ref.completions.values())
+
+
+@pytest.mark.slow
+def test_pod_smoke_two_process_distributed(tmp_path):
+    """Real 2-process ``jax.distributed`` run (gloo collectives, one CPU
+    device per process): both hosts replay the shared queue, each writes
+    its owned rows, and the union reassembles the in-process single-host
+    reference bitwise."""
+    import json
+    import os
+    import socket
+    import subprocess
+    import sys
+
+    from repro.launch import pod_smoke
+
+    with socket.socket() as s:                 # free coordinator port
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)                 # one device per process
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.pod_smoke",
+         "--coordinator", f"127.0.0.1:{port}",
+         "--num-processes", "2", "--process-id", str(h),
+         "--out", str(tmp_path / f"pod{h}.json")],
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        for h in (0, 1)]
+    outs = [p.communicate(timeout=240)[0] for p in procs]
+    for p, out in zip(procs, outs):
+        assert p.returncode == 0, out[-2000:]
+        assert "pod_smoke OK" in out
+    arts = [json.loads((tmp_path / f"pod{h}.json").read_text())
+            for h in (0, 1)]
+
+    ref = pod_smoke.artifact(
+        pod_smoke.serve_pod(1, 0, slots=8, n_requests=6, k=4, depth=2), 0)
+    assert set(ref["completions"]) == set(arts[0]["completions"]) \
+        == set(arts[1]["completions"])
+    for rid, rc in ref["completions"].items():
+        c0, c1 = arts[0]["completions"][rid], arts[1]["completions"][rid]
+        assert not set(c0["owned"]) & set(c1["owned"]), rid
+        assert sorted(c0["owned"] + c1["owned"]) \
+            == sorted(int(i) for i in rc["rows"]), rid
+        assert c0["retire_tick"] == c1["retire_tick"] == rc["retire_tick"]
+        for i, row in {**c0["rows"], **c1["rows"]}.items():
+            assert row == rc["rows"][i], (rid, i)

@@ -1,0 +1,69 @@
+"""Lint: every ServeEngine construction must go through EngineConfig.
+
+The legacy keyword constructor ``ServeEngine(sched, apply_fn,
+server_params, image_shape, **knobs)`` is a one-release deprecation shim;
+new call sites must build an :class:`EngineConfig` and call
+``ServeEngine(config, server_params)``.  This walks the AST of every
+Python file under src/, examples/, benchmarks/, and tests/ and flags any
+``ServeEngine(...)`` call that doesn't fit the two-positional-args,
+no-keywords config form.  ``tests/test_engine_config.py`` is allowlisted —
+it is the shim's coverage.
+
+    python tools/check_engine_config.py          # exit 1 on findings
+"""
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "examples", "benchmarks", "tests")
+ALLOWLIST = {os.path.join("tests", "test_engine_config.py")}
+
+
+def _is_serve_engine(func) -> bool:
+    return (isinstance(func, ast.Name) and func.id == "ServeEngine") or \
+        (isinstance(func, ast.Attribute) and func.attr == "ServeEngine")
+
+
+def check_file(path: str, rel: str):
+    with open(path) as f:
+        try:
+            tree = ast.parse(f.read(), filename=rel)
+        except SyntaxError as e:
+            return [(rel, e.lineno or 0, f"syntax error: {e.msg}")]
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_serve_engine(node.func)):
+            continue
+        if len(node.args) > 2 or node.keywords:
+            findings.append(
+                (rel, node.lineno,
+                 "legacy ServeEngine(...) call — construct an EngineConfig "
+                 "and call ServeEngine(config, server_params)"))
+    return findings
+
+
+def main() -> int:
+    findings = []
+    for d in SCAN_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(ROOT, d)):
+            for name in sorted(files):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, ROOT)
+                if rel in ALLOWLIST:
+                    continue
+                findings.extend(check_file(path, rel))
+    for rel, line, msg in findings:
+        print(f"{rel}:{line}: {msg}")
+    if findings:
+        print(f"\n{len(findings)} legacy ServeEngine call site(s); see "
+              "EngineConfig in src/repro/serve/engine.py")
+        return 1
+    print("check_engine_config: all ServeEngine call sites use EngineConfig")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
