@@ -1,11 +1,16 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/,
-plus the system-bench tables (clients_scaling, serve_continuous) from
-results/BENCH_*.json when present.
+plus the system-bench tables (clients_scaling, serve_continuous, ddim,
+privacy, masked_step, pod_ticks, obs) from results/BENCH_*.json when
+present.
 
     PYTHONPATH=src python -m benchmarks.report            # markdown to stdout
+    PYTHONPATH=src python -m benchmarks.report --all      # one consolidated
+                                                          # table over every
+                                                          # results/BENCH_*
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -192,6 +197,104 @@ def pod_ticks_table(rec):
           f"{lag} ticks (bound: k-1 = {rec['k'] - 1})")
 
 
+def obs_table(rec):
+    print(f"observability stack (trace + registry + timelines) through the "
+          f"k-tick engine — {rec['n_requests']} in-flight on "
+          f"{rec['slots']} slots, T={rec['T']}, k={rec['k']}, "
+          f"async_depth={rec['async_depth']}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| obs | ticks/s | overhead | trace events | dispatch spans "
+          "| windows | metric snapshots | timelines |")
+    print("|---|---|---|---|---|---|---|---|")
+    spans = rec.get("phase_spans", {})
+    print(f"| off | {rec['ticks_per_s_off']:.0f} | — | — | — "
+          f"| {rec['windows']} | — | — |")
+    print(f"| on | {rec['ticks_per_s_on']:.0f} "
+          f"| {rec['overhead_frac'] * 100:+.1f}% | {rec['trace_events']} "
+          f"| {spans.get('dispatch', 0)} | {rec['windows']} "
+          f"| {rec['metric_snapshots']} | {rec['timelines']} |")
+    print(f"\ngates: obs off bitwise == obs on "
+          f"({'held' if rec.get('bitwise_equal') else 'FAILED'}); "
+          f"overhead <= 5% ticks/sec (full run); one dispatch span per "
+          f"window; Chrome trace-event schema validates")
+
+
+# every known BENCH_* record keyed by file stem -> (section title, renderer);
+# scaling is a list, the rest are single records
+_BENCH_SECTIONS = [
+    ("clients_scaling", "§Multi-client round scaling (batched vs looped)",
+     clients_scaling_table),
+    ("serve", "§Serving (continuous batching)", serve_table),
+    ("ddim", "§Strided DDIM serving (sampler layer)", ddim_table),
+    ("privacy", "§KID-gated admission (privacy-aware serving)",
+     privacy_table),
+    ("masked_step", "§Fused masked denoise tick (StepBackend pallas_masked)",
+     masked_step_table),
+    ("pod_ticks", "§Pod-scale async serving (k-tick scan dispatch)",
+     pod_ticks_table),
+    ("obs", "§Observability overhead (repro.obs)", obs_table),
+]
+
+
+def _headline(name, rec):
+    """One (metric, value, gate) headline per bench for the --all rollup."""
+    if name == "clients_scaling":                     # list of rows
+        at = max(rec, key=lambda r: r["n_clients"])
+        return ("speedup vs looped",
+                f"{at['speedup']:.2f}x @ {at['n_clients']} clients",
+                ">=3x @ 32 (full)")
+    if name == "serve":
+        return ("speedup vs sequential", f"{rec['speedup']:.2f}x",
+                ">=3x @ 32 in-flight (full)")
+    if name == "ddim":
+        return ("server ticks/request dense/ddim",
+                f"{rec['ticks_ratio']:.2f}x", ">=5x")
+    if name == "privacy":
+        adm = rec.get("admission", {})
+        return ("ticks gated/ungated", f"{rec['ticks_ratio']:.3f}x "
+                f"({adm.get('bumped', 0)} bumped, "
+                f"{adm.get('rejected', 0)} rejected)", "<=1.5x, KID floor")
+    if name == "masked_step":
+        return ("bytes jnp/fused", f"{rec['bytes_ratio']:.2f}x", ">=2x")
+    if name == "pod_ticks":
+        worst = min(m["ticks_per_s_ratio"] for m in rec["modes"].values())
+        return ("worst ticks/s k-scan vs sync", f"{worst:.2f}x",
+                ">=2x (full), bitwise")
+    if name == "obs":
+        return ("obs-on ticks/s overhead",
+                f"{rec['overhead_frac'] * 100:+.1f}%",
+                "<=5% (full), bitwise off")
+    return ("", "", "")
+
+
+def all_table():
+    """--all: one consolidated markdown table over every BENCH_*.json on
+    disk (known sections first, unknown files appended raw), then the
+    per-bench detail sections."""
+    stems = sorted(f[len("BENCH_"):-len(".json")]
+                   for f in os.listdir(RESULTS) if f.startswith("BENCH_")
+                   and f.endswith(".json")) if os.path.isdir(RESULTS) else []
+    known = [s for s, _, _ in _BENCH_SECTIONS]
+    print("## All system benches (results/BENCH_*.json)\n")
+    print("| bench | scale | headline metric | value | gate |")
+    print("|---|---|---|---|---|")
+    for name in known + [s for s in stems if s not in known]:
+        rec = _load_bench(name)
+        if rec is None:
+            continue
+        toy = (rec.get("toy") if isinstance(rec, dict) else None)
+        scale = "toy" if toy else ("full" if toy is not None else "—")
+        metric, value, gate = _headline(name, rec)
+        if not metric:
+            metric, value, gate = "(unrecognised record)", "—", "—"
+        print(f"| {name} | {scale} | {metric} | {value} | {gate} |")
+    for name, title, render in _BENCH_SECTIONS:
+        rec = _load_bench(name)
+        if rec is not None:
+            print(f"\n## {title}\n")
+            render(rec)
+
+
 def summary(recs):
     n = len(recs)
     dom = {}
@@ -210,7 +313,16 @@ def summary(recs):
         print(f"worst compute fraction: {worst[0]} ({worst[1]:.1%})")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true",
+                    help="consolidated markdown over every "
+                         "results/BENCH_*.json (headline table + detail "
+                         "sections), skipping the dry-run/roofline tables")
+    args = ap.parse_args(argv)
+    if args.all:
+        all_table()
+        return
     recs = load("single")
     print(f"## §Dry-run (single-pod 16x16, {len(recs)}/40 combos)\n")
     dryrun_table(recs)
@@ -221,30 +333,11 @@ def main():
     print("\n## §Roofline (single-pod)\n")
     roofline_table(recs)
     summary(recs)
-    scaling = _load_bench("clients_scaling")
-    if scaling:
-        print("\n## §Multi-client round scaling (batched vs looped)\n")
-        clients_scaling_table(scaling)
-    serve = _load_bench("serve")
-    if serve:
-        print("\n## §Serving (continuous batching)\n")
-        serve_table(serve)
-    ddim = _load_bench("ddim")
-    if ddim:
-        print("\n## §Strided DDIM serving (sampler layer)\n")
-        ddim_table(ddim)
-    priv = _load_bench("privacy")
-    if priv:
-        print("\n## §KID-gated admission (privacy-aware serving)\n")
-        privacy_table(priv)
-    masked = _load_bench("masked_step")
-    if masked:
-        print("\n## §Fused masked denoise tick (StepBackend pallas_masked)\n")
-        masked_step_table(masked)
-    pod = _load_bench("pod_ticks")
-    if pod:
-        print("\n## §Pod-scale async serving (k-tick scan dispatch)\n")
-        pod_ticks_table(pod)
+    for name, title, render in _BENCH_SECTIONS:
+        rec = _load_bench(name)
+        if rec is not None:
+            print(f"\n## {title}\n")
+            render(rec)
 
 
 if __name__ == "__main__":

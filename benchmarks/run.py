@@ -910,6 +910,183 @@ def bench_pod_ticks(args):
     return rec
 
 
+def bench_obs_overhead(args):
+    """Observability-cost gate: the ``repro.obs`` stack (tracing + metrics
+    registry + per-request timelines) threaded through the k-tick
+    double-buffered engine must be FREE when off and near-free when on.
+
+    Gates:
+
+    * obs OFF is the pre-obs engine, bitwise: completions AND admission
+      decisions identical to an ``obs=None`` run (always asserted — the
+      exact per-tick utilization accounting is unconditional, so even the
+      summary's utilization_mean must agree);
+    * obs ON (trace + registry + timelines + JSONL snapshots) costs <= 5%
+      ticks/sec with 256 in-flight requests churning through 32 slots
+      (enforced on the full run only — CPU wall-clock noise at toy scale);
+    * the exported trace validates against the Chrome trace-event schema
+      and contains a ``dispatch`` phase span for EVERY window the engine
+      ran, plus ``sync_wait``/``retire``/``admit`` host-loop phases;
+    * every timeline walks queued -> ... -> retired in stage order, and
+      the metrics JSONL parses with the expected instrument names.
+
+    Writes results/BENCH_obs.json plus the sample artifacts
+    results/obs_trace.json and results/obs_metrics.jsonl that the CI
+    bench-smoke job uploads."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.diffusion.sampler import make_sampler
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.obs import (ObsConfig, load_trace, read_jsonl,
+                           validate_events)
+    from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                             ServeEngine)
+
+    T, K = (10, 5) if args.toy else (50, 10)
+    slots = 8 if args.toy else 32
+    n_req = 24 if args.toy else 256
+    k_hot, depth = 8, 2
+    size = 8
+    shape = (size, size, 1)
+    cut_ratios = (0.25, 0.5, 0.75)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    samplers = {"ddpm": make_sampler(T),
+                "ddim": make_sampler(T, "ddim", K, eta=0.0)}
+
+    def requests():
+        return [Request(req_id=i, key=jax.random.fold_in(
+                            jax.random.PRNGKey(7), i),
+                        batch=1, cut_ratio=cut_ratios[i % len(cut_ratios)],
+                        sampler=("ddpm", "ddim")[i % 2])
+                for i in range(n_req)]
+
+    def admission():
+        # median ddim floor => a mix of admit and bump decisions whose
+        # replay the obs-on run must not perturb
+        calib = jnp.tanh(jax.random.normal(jax.random.PRNGKey(5),
+                                           (8,) + shape))
+        probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
+                                samplers=samplers,
+                                server_fn=functools.partial(apply_fn,
+                                                            server_params))
+        return probe.with_min_kid(float(np.median(probe.profile("ddim"))))
+
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "obs_trace.json")
+    metrics_path = os.path.join(RESULTS, "obs_metrics.jsonl")
+    if os.path.exists(metrics_path):
+        os.remove(metrics_path)                 # JSONL appends across runs
+    obs_cfg = ObsConfig(trace_path=trace_path, metrics_path=metrics_path,
+                        metrics_every=4)
+    base_cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                            image_shape=shape, slots=slots,
+                            samplers=samplers, ticks_per_dispatch=k_hot,
+                            async_depth=depth)
+
+    def run(obs):
+        eng = ServeEngine(dataclasses.replace(
+            base_cfg, admission=admission(), obs=obs), server_params)
+        eng.serve(requests())                         # compile + warmup
+        if eng.obs:
+            # the tracer accumulates across serve() calls — drop the warmup
+            # spans so the span-per-window gate counts the timed run only
+            eng.obs.tracer.clear()
+        return eng.serve(requests()), eng
+
+    print(f"# obs_overhead: {n_req} in-flight (batch 1, mixed ddpm/ddim, "
+          f"KID-gated) on {slots} slots, T={T}, k={k_hot} depth={depth} — "
+          f"obs off vs obs on (trace+registry+timelines+JSONL)")
+    res_off, _ = run(None)                            # the pre-obs engine
+    res_on, eng_on = run(obs_cfg)
+
+    # ---- gate 1: obs off == obs on, bitwise ---------------------------
+    assert set(res_on.completions) == set(res_off.completions)
+    assert res_on.decisions == res_off.decisions, \
+        "obs changed admission decisions"
+    for rid, comp in res_off.completions.items():
+        np.testing.assert_array_equal(res_on.completions[rid].x_mid,
+                                      comp.x_mid,
+                                      err_msg=f"req {rid} x_mid diverged")
+    assert res_on.summary["ticks"] == res_off.summary["ticks"]
+    assert (res_on.summary["utilization_mean"] ==
+            res_off.summary["utilization_mean"]), \
+        "exact utilization accounting must not depend on obs"
+    assert res_off.timelines == {}, "obs=None must record no timelines"
+
+    # ---- gate 2: trace validates + phase spans for every window -------
+    events = load_trace(trace_path)
+    n_events = validate_events(events)
+    windows = res_on.summary["windows"]
+    spans = {}
+    for e in events:
+        if e.get("ph") == "X":
+            spans[e["name"]] = spans.get(e["name"], 0) + 1
+    assert spans.get("dispatch", 0) == windows, \
+        f"{spans.get('dispatch', 0)} dispatch spans != {windows} windows"
+    for phase in ("sync_wait", "retire", "admit"):
+        assert spans.get(phase, 0) >= 1, f"no {phase} span in trace"
+
+    # ---- gate 3: timelines + metrics JSONL ----------------------------
+    # every request gets a lifecycle (served OR rejected), in stage order
+    order = {s: i for i, s in enumerate(
+        ("queued", "scored", "admitted", "first_tick", "retired",
+         "client_finished", "rejected"))}
+    assert set(res_on.timelines) == set(range(n_req)), \
+        "every request must have a timeline"
+    for rid, tl in res_on.timelines.items():
+        stages = [e["stage"] for e in tl]
+        idx = [order[s] for s in stages]
+        assert idx == sorted(idx) and len(set(stages)) == len(stages), \
+            f"req {rid}: stages out of order: {stages}"
+        assert stages[0] == "queued", stages
+        served = res_on.decisions[rid].served
+        assert ("retired" in stages) == served, (stages, served)
+        assert ("rejected" in stages) == (not served), (stages, served)
+    lines = read_jsonl(metrics_path)
+    assert lines and lines[-1].get("final"), "metrics JSONL missing"
+    names = set(lines[-1]["metrics"])
+    for want in ("serve_ticks_total", "serve_retired_total",
+                 "serve_latency_ticks", "serve_queue_depth"):
+        assert want in names, f"{want} absent from registry snapshot"
+
+    # ---- gate 4: ticks/sec overhead <= 5% (full run) ------------------
+    tps_off = res_off.summary["ticks_per_s"]
+    tps_on = res_on.summary["ticks_per_s"]
+    overhead = 1.0 - tps_on / tps_off
+    print("obs,ticks,wall_s,ticks_per_s")
+    print(f"off,{res_off.summary['ticks']},{res_off.wall_s:.3f},"
+          f"{tps_off:.1f}")
+    print(f"on,{res_on.summary['ticks']},{res_on.wall_s:.3f},{tps_on:.1f}")
+    print(f"bitwise equal; {n_events} trace events "
+          f"({spans['dispatch']} dispatch spans = {windows} windows); "
+          f"{len(lines)} metric snapshots; "
+          f"obs overhead {overhead * 100:+.1f}% ticks/sec", flush=True)
+
+    rec = {"scenario": "obs_overhead", "toy": bool(args.toy),
+           "slots": slots, "n_requests": n_req, "T": T, "k": k_hot,
+           "async_depth": depth, "bitwise_equal": True,
+           "ticks": res_on.summary["ticks"], "windows": windows,
+           "ticks_per_s_off": tps_off, "ticks_per_s_on": tps_on,
+           "overhead_frac": overhead, "trace_events": n_events,
+           "phase_spans": spans, "metric_snapshots": len(lines),
+           "timelines": len(res_on.timelines),
+           "aging_promotions": res_on.summary.get("aging_promotions", 0)}
+    out = os.path.join(RESULTS, "BENCH_obs.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out} (+ obs_trace.json, obs_metrics.jsonl)")
+    if not args.toy:
+        # issue gate: full observability costs <= 5% ticks/sec
+        assert overhead <= 0.05, \
+            f"obs costs {overhead * 100:.1f}% ticks/sec (> 5%)"
+    return rec
+
+
 def bench_kernels(args):
     from repro.diffusion import ddpm as ddpm_mod
     from repro.diffusion.schedule import cosine_schedule
@@ -1007,6 +1184,7 @@ BENCHES = {
     "ddim_speedup": bench_ddim_speedup,
     "privacy_admission": bench_privacy_admission,
     "pod_ticks": bench_pod_ticks,
+    "obs_overhead": bench_obs_overhead,
     "kernels": bench_kernels,
     "masked_step": bench_masked_step,
     "roofline": bench_roofline,

@@ -40,6 +40,11 @@ def _parse_args(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--ticks-per-dispatch", type=int, default=4)
     ap.add_argument("--async-depth", type=int, default=2)
+    ap.add_argument("--trace-out", default="",
+                    help="per-host Chrome trace export: host i writes "
+                         "<path>.host<i> with pid=i-tagged events, so "
+                         "repro.obs.merge_traces folds a pod run into ONE "
+                         "Perfetto timeline (one lane per host)")
     return ap.parse_args(argv)
 
 
@@ -83,16 +88,21 @@ def build_requests(n):
 
 
 def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
-              mesh=None):
+              mesh=None, trace_out=""):
     """Build the pod engine and serve the canonical workload; returns the
-    ServeResult.  ``mesh=None`` runs hostless (the in-process reference)."""
-    from repro.serve import EngineConfig, ServeEngine
+    ServeResult.  ``mesh=None`` runs hostless (the in-process reference).
+    ``trace_out`` turns on obs tracing: each host exports its own
+    pid-tagged trace (``<path>.host<i>`` under multiple processes) for a
+    later :func:`repro.obs.merge_traces` into one pod timeline."""
+    from repro.serve import EngineConfig, ObsConfig, ServeEngine
     sched, apply_fn, server, samplers = build_world()
+    obs = ObsConfig(trace_path=trace_out) if trace_out else None
     cfg = EngineConfig(sched=sched, apply_fn=apply_fn, image_shape=SHAPE,
                        slots=slots, samplers=samplers, mesh=mesh,
                        ticks_per_dispatch=k, async_depth=depth,
                        hosts=num_processes,
-                       host_id=process_id if num_processes > 1 else 0)
+                       host_id=process_id if num_processes > 1 else 0,
+                       obs=obs)
     return ServeEngine(cfg, server).serve(build_requests(n_requests))
 
 
@@ -131,7 +141,10 @@ def main(argv=None):
 
     res = serve_pod(args.num_processes, args.process_id, args.slots,
                     args.requests, args.ticks_per_dispatch,
-                    args.async_depth, mesh=mesh)
+                    args.async_depth, mesh=mesh, trace_out=args.trace_out)
+    if args.trace_out:
+        suffix = f".host{args.process_id}" if args.num_processes > 1 else ""
+        print(f"wrote trace {args.trace_out}{suffix}", flush=True)
     art = artifact(res, args.process_id)
     n_rows = sum(len(c["rows"]) for c in art["completions"].values())
     print(f"pod_smoke host {args.process_id}/{args.num_processes}: "

@@ -25,6 +25,9 @@ def _parse_args(argv=None):
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace-event JSON with one span "
+                         "per prefill/decode wave (Perfetto-loadable)")
     return ap.parse_args(argv)
 
 
@@ -48,6 +51,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     d, m = mesh.shape["data"], mesh.shape["model"]
     ctx = make_ctx(mesh)
+    from repro.obs import NULL_TRACER, Tracer
+    tracer = Tracer(process_name="llm-serve") if args.trace_out \
+        else NULL_TRACER
     print(f"serving {args.arch} on data:{d}xmodel:{m} "
           f"(window={args.window or 'full'})")
 
@@ -83,25 +89,34 @@ def main(argv=None):
             c_shard = shd.to_shardings(shd.cache_specs(cache, ctx), mesh)
             cache = jax.device_put(cache, c_shard)
             t0 = time.time()
-            last, cache = prefill(params, cache, prompts)
-            jax.block_until_ready(last)
+            with tracer.span("prefill", cat="llm", request=req,
+                             batch=b, prompt_len=s):
+                last, cache = prefill(params, cache, prompts)
+                jax.block_until_ready(last)
             t_prefill = time.time() - t0
             tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
             logits = last[:, None]
             out = [tok]
             t0 = time.time()
-            for i in range(args.tokens - 1):
-                logits, cache = decode(params, cache, tok, jnp.int32(s + i))
-                key, k_d = jax.random.split(key)
-                tok = jax.random.categorical(
-                    k_d, logits[:, -1])[:, None].astype(jnp.int32)
-                out.append(tok)
-            jax.block_until_ready(out[-1])
+            with tracer.span("decode", cat="llm", request=req,
+                             tokens=args.tokens):
+                for i in range(args.tokens - 1):
+                    logits, cache = decode(params, cache, tok,
+                                           jnp.int32(s + i))
+                    key, k_d = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        k_d, logits[:, -1])[:, None].astype(jnp.int32)
+                    out.append(tok)
+                jax.block_until_ready(out[-1])
             t_dec = time.time() - t0
             assert bool(jnp.isfinite(logits).all())
             print(f"request {req}: prefill {b}x{s} {t_prefill:.2f}s | "
                   f"decode {args.tokens} toks {t_dec:.2f}s "
                   f"({args.tokens*b/max(t_dec,1e-9):.1f} tok/s)", flush=True)
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"wrote trace {args.trace_out} "
+              f"({len(tracer.events())} events)")
     print("serving loop OK")
 
 

@@ -74,6 +74,19 @@ def _parse_args(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="",
                     help="write the serve summary to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace-event JSON of the host "
+                         "loop's phase spans + per-request tracks (load in "
+                         "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="append registry snapshots (JSON-lines) at every "
+                         "--metrics-every window boundaries")
+    ap.add_argument("--metrics-every", type=int, default=1,
+                    help="snapshot cadence in windows for --metrics-out")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the first "
+                         "--profile-windows dispatches into this directory")
+    ap.add_argument("--profile-windows", type=int, default=4)
     return ap.parse_args(argv)
 
 
@@ -150,6 +163,15 @@ def main(argv=None):
             admission = AdmissionPolicy(sched, calib_sets[0],
                                         min_kid=args.min_kid,
                                         samplers=samplers)
+        obs = None
+        if args.trace_out or args.metrics_out or args.profile_dir:
+            from repro.serve import ObsConfig
+            obs = ObsConfig(
+                trace_path=args.trace_out or None,
+                metrics_path=args.metrics_out or None,
+                metrics_every=args.metrics_every,
+                profile_dir=args.profile_dir or None,
+                profile_windows=args.profile_windows)
         cfg = EngineConfig(
             sched=sched, apply_fn=apply_fn,
             image_shape=(args.image, args.image, 1), slots=args.slots,
@@ -157,7 +179,7 @@ def main(argv=None):
             step_backend=args.step_backend, mesh=mesh, samplers=samplers,
             admission=admission,
             ticks_per_dispatch=args.ticks_per_dispatch,
-            async_depth=args.async_depth)
+            async_depth=args.async_depth, obs=obs)
         eng = ServeEngine(cfg, server_params)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
@@ -183,6 +205,17 @@ def main(argv=None):
             assert comp.x0 is not None and bool(
                 jax.numpy.isfinite(jax.numpy.asarray(comp.x0)).all()), \
                 f"non-finite output for request {comp.request.req_id}"
+
+        if obs is not None and res.timelines:
+            rid = min(res.timelines)
+            print(f"request {rid} lifecycle: " + " -> ".join(
+                f"{e['stage']}@t{e['tick']}" if "tick" in e else e["stage"]
+                for e in res.timelines[rid]), flush=True)
+        if args.trace_out:
+            print(f"wrote trace {args.trace_out} "
+                  f"({len(eng.obs.tracer.events())} events)")
+        if args.metrics_out:
+            print(f"wrote metrics {args.metrics_out}")
 
         if args.compare_sequential:
             seq_s = time_sequential(cfg, requests, server_params,

@@ -10,7 +10,13 @@
                 bumped to a noisier cut or rejected.
 ``metrics``   — per-request latency, tick utilization, FLOP-split summary,
                 admission decision counts + disclosure-KID histogram.
+
+Observability (``repro.obs``) threads through all of it: pass
+``EngineConfig(obs=ObsConfig(...))`` for host-loop phase tracing, a live
+metrics registry, and per-request lifecycle timelines (zero-cost when
+omitted) — re-exported here so serve callers need one import.
 """
+from repro.obs import NULL_OBS, Observability, ObsConfig
 from repro.serve.admission import AdmissionDecision, AdmissionPolicy
 from repro.serve.engine import (Completion, EngineConfig, ServeEngine,
                                 ServeResult, serve_sequential,
@@ -21,10 +27,12 @@ from repro.serve.scheduler import (CutRatioScheduler, FIFOScheduler, Request,
 
 # the stable public surface: construct an EngineConfig, hand it (plus the
 # server weights) to ServeEngine, and call serve() — everything else here
-# is the supporting vocabulary (requests, schedulers, admission, metrics)
+# is the supporting vocabulary (requests, schedulers, admission, metrics,
+# observability)
 __all__ = [
     "AdmissionDecision", "AdmissionPolicy", "Completion",
-    "CutRatioScheduler", "EngineConfig", "FIFOScheduler", "Request",
-    "ServeEngine", "ServeMetrics", "ServeResult", "admission_summary",
-    "make_scheduler", "serve_sequential", "time_sequential",
+    "CutRatioScheduler", "EngineConfig", "FIFOScheduler", "NULL_OBS",
+    "Observability", "ObsConfig", "Request", "ServeEngine", "ServeMetrics",
+    "ServeResult", "admission_summary", "make_scheduler",
+    "serve_sequential", "time_sequential",
 ]

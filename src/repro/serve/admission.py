@@ -49,6 +49,7 @@ from repro.core.collafuse import CutPlan
 from repro.diffusion.backend import BackendLike
 from repro.diffusion.sampler import Sampler, assert_same_menu
 from repro.diffusion.schedule import DiffusionSchedule
+from repro.obs.trace import NULL_TRACER
 
 ADMIT, BUMP, REJECT = "admit", "bump", "reject"
 
@@ -134,6 +135,10 @@ class AdmissionPolicy:
         self._kid_fn = None                      # jitted, built at first use
         self._kid_cache: Dict[tuple, float] = {}
         self._decision_cache: Dict[tuple, AdmissionDecision] = {}
+        # observability: the engine attaches its tracer so cache FILLS
+        # (the O(menu x cuts) jitted scoring work, not the O(requests)
+        # dict hits) show up as spans on the serve timeline
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------------
     def bind(self, *, server_fn=None, samplers=None) -> None:
@@ -178,6 +183,7 @@ class AdmissionPolicy:
         p._calib_feats = self._calib_feats
         p._kid_fn = self._kid_fn
         p._kid_cache = self._kid_cache           # shared, floor-independent
+        p.tracer = self.tracer
         return p
 
     # ------------------------------------------------------------------
@@ -211,11 +217,13 @@ class AdmissionPolicy:
                 f"{sorted(self.samplers or {})}"
             smp = self.samplers[sampler_name]
             assert 0 <= pos <= smp.K, (pos, smp.K)
-            if self._calib_feats is None:
-                self._calib_feats = privacy.extract_features(
-                    self.feat_params, self.calib)
-            self._kid_cache[ck] = float(self._score_fn()(
-                self.calib, self._calib_feats, self.key, smp, int(pos)))
+            with self.tracer.span("admission_score", cat="admission",
+                                  sampler=sampler_name, pos=int(pos)):
+                if self._calib_feats is None:
+                    self._calib_feats = privacy.extract_features(
+                        self.feat_params, self.calib)
+                self._kid_cache[ck] = float(self._score_fn()(
+                    self.calib, self._calib_feats, self.key, smp, int(pos)))
         return self._kid_cache[ck]
 
     def profile(self, sampler_name: str,

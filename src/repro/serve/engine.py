@@ -70,6 +70,7 @@ from repro.diffusion.backend import (BackendLike, get_backend,
                                      make_lane_tick)
 from repro.diffusion.sampler import Sampler, assert_same_menu, default_samplers
 from repro.diffusion.schedule import DiffusionSchedule
+from repro.obs import NULL_OBS, Observability, ObsConfig, resolve_obs
 from repro.serve.admission import AdmissionDecision, AdmissionPolicy
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import CutRatioScheduler, FIFOScheduler, Request
@@ -101,6 +102,10 @@ class ServeResult:
     # one AdmissionDecision per request when a KID gate is configured
     # (empty ungated); rejected requests appear HERE and not in completions
     decisions: Dict[int, AdmissionDecision] = \
+        dataclasses.field(default_factory=dict)
+    # per-request lifecycle timelines ({req_id: [{stage, wall, tick?,
+    # ...}]}) when the engine runs with an obs config; empty obs-off
+    timelines: Dict[int, List[Dict]] = \
         dataclasses.field(default_factory=dict)
 
     @property
@@ -151,8 +156,16 @@ class EngineConfig:
     async_depth: int = 1
     hosts: int = 1
     host_id: Optional[int] = None
+    # observability: None (default, zero-cost off), an ObsConfig, or a
+    # shared Observability instance (e.g. one bundle for engine + trainer)
+    obs: Any = None
 
     def __post_init__(self):
+        if self.obs is not None:
+            assert isinstance(self.obs, (ObsConfig, Observability)) \
+                or self.obs is NULL_OBS, \
+                f"obs must be None, ObsConfig or Observability; got " \
+                f"{type(self.obs).__name__}"
         object.__setattr__(self, "image_shape", tuple(self.image_shape))
         assert self.slots >= 1, self.slots
         assert 1 <= self.ticks_per_dispatch <= 512, \
@@ -278,6 +291,14 @@ class ServeEngine:
             self.host_id = cfg.host_id or 0
         self._lane_owned = \
             shd.lane_owners(self.slots, self.hosts) == self.host_id
+        # ---- observability (repro.obs) ----------------------------------
+        # resolved ONCE: NULL_OBS (falsy; every pillar a cached no-op) when
+        # cfg.obs is None, so the obs-off hot path is bitwise the pre-obs
+        # engine (gated in benchmarks.run --only obs_overhead)
+        self.obs = resolve_obs(cfg.obs, host_id=self.host_id)
+        if self.admission is not None:
+            self.admission.tracer = self.obs.tracer
+        self.scheduler.registry = self.obs.registry if self.obs else None
         # hoisted out of the tick: every registered trajectory's (4, K)
         # coefficient table concatenated column-wise (gathered per-lane in
         # SMEM by the fused kernel), plus the per-trajectory column offset,
@@ -451,8 +472,12 @@ class ServeEngine:
             "k_cli": np.asarray(k_cli),
             "x_mid": np.zeros((req.batch,) + self.image_shape, np.float32),
             "owned": np.zeros((req.batch,), bool),
+            "exact_tick": -1,            # max exact finish over its lanes
         }
         metrics.on_admit(req.req_id, now)
+        if self.obs:
+            self.obs.request(req.req_id, "admitted", tick=now,
+                             lanes=[int(x) for x in lanes])
         return k_init, k_srv
 
     def _admit_device(self, state, admits):
@@ -520,32 +545,43 @@ class ServeEngine:
         """Block on ONE in-flight window's done stack and run its retire
         bookkeeping.  ``retire_tick`` is the window BOUNDARY (start + k);
         the per-tick stack recovers each lane's exact finish for the
-        boundary-lag metric (≤ k-1 by construction)."""
-        done_seq, x_ref, start = win
-        done_np = np.asarray(done_seq)           # (k, slots); blocks here
+        boundary-lag metric (≤ k-1 by construction) and the EXACT
+        per-tick occupancy samples (``ServeMetrics.on_window_exact`` —
+        the stack is already being synced, no new device round-trip)."""
+        done_seq, x_ref, start, n_active = win
+        tracer = self.obs.tracer
+        with tracer.span("sync_wait", start_tick=start):
+            done_np = np.asarray(done_seq)       # (k, slots); blocks here
         k = done_np.shape[0]
         boundary = start + k
+        metrics.on_window_exact(n_active, done_np.sum(axis=1))
         lanes = np.nonzero(done_np.any(axis=0))[0]
         if not lanes.size:
             return
         first = done_np.argmax(axis=0)           # first done tick per lane
-        rows = self._host_rows(x_ref, lanes.tolist())
-        for lane in lanes.tolist():
-            metrics.on_boundary_lag(int(k - 1 - first[lane]))
-            rec = inflight[int(lane_req[lane])]
-            img = int(lane_img[lane])
-            if lane in rows:
-                rec["x_mid"][img] = rows[lane]
-                rec["owned"][img] = True
-            rec["remaining"] -= 1
-            if rec["remaining"] == 0:
-                r = rec["request"]
-                metrics.on_retire(r.req_id, boundary)
-                completions[r.req_id] = Completion(
-                    request=r, x_mid=rec["x_mid"],
-                    admit_tick=rec["admit_tick"], retire_tick=boundary,
-                    k_cli=rec["k_cli"], owned=rec["owned"])
-            lane_req[lane] = lane_img[lane] = -1
+        with tracer.span("retire", start_tick=start,
+                         lanes=int(lanes.size)):
+            rows = self._host_rows(x_ref, lanes.tolist())
+            for lane in lanes.tolist():
+                metrics.on_boundary_lag(int(k - 1 - first[lane]))
+                rec = inflight[int(lane_req[lane])]
+                img = int(lane_img[lane])
+                if lane in rows:
+                    rec["x_mid"][img] = rows[lane]
+                    rec["owned"][img] = True
+                rec["remaining"] -= 1
+                rec["exact_tick"] = max(rec["exact_tick"],
+                                        start + int(first[lane]))
+                if rec["remaining"] == 0:
+                    r = rec["request"]
+                    metrics.on_retire(r.req_id, boundary)
+                    self.obs.request(r.req_id, "retired", tick=boundary,
+                                     exact_tick=rec["exact_tick"])
+                    completions[r.req_id] = Completion(
+                        request=r, x_mid=rec["x_mid"],
+                        admit_tick=rec["admit_tick"], retire_tick=boundary,
+                        k_cli=rec["k_cli"], owned=rec["owned"])
+                lane_req[lane] = lane_img[lane] = -1
 
     def _serve_server(self, requests: List[Request],
                       max_ticks: Optional[int] = None) -> ServeResult:
@@ -561,14 +597,24 @@ class ServeEngine:
         assert len({r.req_id for r in requests}) == len(requests), \
             "duplicate req_ids: completions/inflight are keyed by req_id"
         k = self.ticks_per_dispatch
+        obs = self.obs
+        tracer = obs.tracer
+        obs.timelines.reset()       # lifecycles are per serve() call
         decisions: Dict[int, AdmissionDecision] = {}
         for r in requests:
             assert r.batch <= self.slots, \
                 f"request {r.req_id} batch {r.batch} > capacity {self.slots}"
             self._sampler_of(r)                    # fail fast on bad names
+            obs.request(r.req_id, "queued", tick=r.arrival_tick,
+                        batch=r.batch, cut_ratio=r.cut_ratio,
+                        sampler=r.sampler)
             d = self._decision(r)                  # cached; gate once here
             if d is not None:
                 decisions[r.req_id] = d
+                obs.request(r.req_id, "scored", action=d.action,
+                            kid=d.kid, effective_cut=d.effective_cut)
+                if not d.served:
+                    obs.request(r.req_id, "rejected")
 
         def _served(r):
             return r.req_id not in decisions or decisions[r.req_id].served
@@ -606,8 +652,22 @@ class ServeEngine:
         # in every LATER window, but pairing each done stack with its own
         # boundary x means syncing window N never blocks on window N+1.
         pending: collections.deque = collections.deque()
-        metrics = ServeMetrics(self.slots)
+        metrics = ServeMetrics(self.slots,
+                               registry=obs.registry if obs else None)
         metrics.start()
+        # obs plumbing resolved before the loop: JSONL snapshot cadence,
+        # jax.profiler window capture, and the live queue/inflight gauges
+        metrics_path = obs.config.metrics_path if obs else None
+        metrics_every = obs.config.metrics_every if obs else 1
+        profile_left = obs.config.profile_windows \
+            if obs and obs.config.profile_dir else 0
+        profile_on = False
+        if obs:
+            g_queue = obs.registry.gauge(
+                "serve_queue_depth", "requests waiting in the scheduler")
+            g_inflight = obs.registry.gauge(
+                "serve_inflight_requests", "requests occupying slots")
+        windows_synced = 0
         t0 = time.perf_counter()
         now = 0
 
@@ -619,28 +679,43 @@ class ServeEngine:
                     k, self.image_shape, jnp.float32))(k_init)
                 metrics.on_admit(r.req_id, now)
                 metrics.on_retire(r.req_id, now)
+                if obs:
+                    obs.request(r.req_id, "admitted", tick=now, local=True)
+                    obs.request(r.req_id, "retired", tick=now,
+                                exact_tick=now)
                 completions[r.req_id] = Completion(
                     request=r, x_mid=np.asarray(x_T), admit_tick=now,
                     retire_tick=now, k_cli=np.asarray(k_cli),
                     owned=np.ones((r.batch,), bool))
 
         def sync_oldest():
+            nonlocal windows_synced
             self._sync_window(pending.popleft(), inflight, lane_req,
                               lane_img, completions, metrics)
+            windows_synced += 1
+            if metrics_path and windows_synced % metrics_every == 0:
+                obs.registry.write_jsonl(metrics_path, host=self.host_id,
+                                         window=windows_synced)
 
         while True:
-            drain_local(now)
             # ---- admission: refill freed slots at the window boundary ---
-            free = np.nonzero(lane_req < 0)[0].tolist()
-            admits = []
-            for req in self.scheduler.select_window(len(free), now, k):
-                lanes, free = free[:req.batch], free[req.batch:]
-                ki, ks = self._admit_host(req, lanes, now, inflight,
-                                          lane_req, lane_img, metrics)
-                admits.append((req, lanes, ki, ks))
-            if admits:
-                state = self._admit_device(state, admits)
+            with tracer.span("admit", tick=now):
+                drain_local(now)
+                free = np.nonzero(lane_req < 0)[0].tolist()
+                admits = []
+                for req in self.scheduler.select_window(len(free), now, k):
+                    lanes, free = free[:req.batch], free[req.batch:]
+                    ki, ks = self._admit_host(req, lanes, now, inflight,
+                                              lane_req, lane_img, metrics)
+                    admits.append((req, lanes, ki, ks))
+                if admits:
+                    state = self._admit_device(state, admits)
             n_active = int((lane_req >= 0).sum())
+            if obs:
+                g_queue.set(len(self.scheduler))
+                g_inflight.set(len(inflight))
+                tracer.counter("serve_occupancy", lanes=n_active,
+                               queued=len(self.scheduler))
             if n_active == 0:
                 if pending:
                     # host thinks nothing is live but windows are in
@@ -656,6 +731,9 @@ class ServeEngine:
                     nxt.append(local_only[0].arrival_tick)
                 target = max(now + 1, min(t for t in nxt if t is not None))
                 metrics.on_idle_gap(target - (now + 1))
+                if obs:
+                    tracer.instant("idle_jump", from_tick=now,
+                                   to_tick=target)
                 now = target
                 if now > max_ticks:
                     raise RuntimeError(
@@ -664,9 +742,28 @@ class ServeEngine:
                         "in-flight — scheduler starvation?")
                 continue
             # ---- ONE dispatch runs k fused ticks over every lane --------
-            state, done_seq = self._tick(state, self.server_params)
-            pending.append((done_seq, state["x"], now))
-            metrics.on_window(n_active, k)
+            if profile_left and not profile_on:
+                # NOT `import jax.profiler` — that would bind `jax` as a
+                # LOCAL of _serve_server and shadow the module import
+                from jax import profiler as _profiler
+                _profiler.start_trace(obs.config.profile_dir)
+                profile_on = True
+            with tracer.span("dispatch", tick=now, lanes=n_active):
+                state, done_seq = self._tick(state, self.server_params)
+            # exact per-tick occupancy is recovered from this window's
+            # done stack at sync time (on_window_exact), so the dispatch
+            # only records the window-start count alongside the refs
+            pending.append((done_seq, state["x"], now, n_active))
+            if profile_on:
+                profile_left -= 1
+                if profile_left <= 0:
+                    jax.block_until_ready(done_seq)
+                    from jax import profiler as _profiler
+                    _profiler.stop_trace()
+                    profile_on = False
+            if obs and admits:
+                for req, _, _, _ in admits:
+                    obs.request(req.req_id, "first_tick", tick=now)
             now += k
             # ---- drain the pipeline down to async_depth - 1 windows -----
             # (async_depth=1: block right here — the synchronous loop)
@@ -693,8 +790,20 @@ class ServeEngine:
                                   decisions=decisions or None)
         summary["ticks_per_dispatch"] = k
         summary["async_depth"] = self.async_depth
+        summary["aging_promotions"] = getattr(self.scheduler,
+                                              "aging_promotions", 0)
+        timelines: Dict[int, List[Dict]] = {}
+        if obs:
+            if metrics_path:
+                obs.registry.write_jsonl(metrics_path, host=self.host_id,
+                                         window=windows_synced, final=True)
+            path = obs.trace_path_for_host(self.hosts)
+            if path:
+                obs.tracer.export(path)
+            timelines = obs.timelines.snapshot()
         return ServeResult(completions=completions, summary=summary,
-                           wall_s=wall, decisions=decisions)
+                           wall_s=wall, decisions=decisions,
+                           timelines=timelines)
 
     # ------------------------------------------------------------------
     def _finish_clients(self, result: ServeResult, client_stack) -> None:
@@ -764,6 +873,7 @@ class ServeEngine:
         for rid in order:
             result.completions[rid].x0 = outs[rid]
             result.completions[rid].client_finished = True
+            self.obs.request(rid, "client_finished")
 
     def serve(self, requests: List[Request], client_stack=None,
               max_ticks: Optional[int] = None) -> ServeResult:
@@ -780,13 +890,22 @@ class ServeEngine:
         result = self._serve_server(requests, max_ticks=max_ticks)
         if client_stack is not None:
             t0 = time.perf_counter()
-            self._finish_clients(result, client_stack)
+            with self.obs.tracer.span("finish_clients",
+                                      requests=len(result.completions)):
+                self._finish_clients(result, client_stack)
             finish_s = time.perf_counter() - t0
             result.wall_s += finish_s
             s = result.summary
             s["finish_s"] = finish_s
             s["requests_per_s"] = s["served"] / max(result.wall_s, 1e-9)
             s["images_per_s"] = s["images"] / max(result.wall_s, 1e-9)
+            if self.obs:
+                # refresh: the finish span + client_finished stages landed
+                # after _serve_server's export/snapshot
+                result.timelines = self.obs.timelines.snapshot()
+                path = self.obs.trace_path_for_host(self.hosts)
+                if path:
+                    self.obs.tracer.export(path)
         return result
 
     # -- deprecated three-call surface (one release) --------------------

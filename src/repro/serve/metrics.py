@@ -18,13 +18,21 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.collafuse import CutPlan, flops_split_steps
+from repro.obs.registry import NULL_REGISTRY
 
 
 class ServeMetrics:
-    """Event sink for one engine run."""
+    """Event sink for one engine run.
 
-    def __init__(self, capacity: int):
+    ``registry`` (an :class:`repro.obs.MetricsRegistry`, default disabled)
+    is the LIVE side: every event is additionally published into named
+    instruments so a long-running engine is observable mid-run via the
+    registry's JSON-lines snapshots, not only at :meth:`summary` time.
+    """
+
+    def __init__(self, capacity: int, registry=None):
         self.capacity = capacity
+        self.registry = registry if registry is not None else NULL_REGISTRY
         self._admit: Dict[int, Dict] = {}       # req_id -> {tick, wall}
         self._retire: Dict[int, Dict] = {}
         self._util: List[float] = []            # active lanes / capacity
@@ -38,25 +46,65 @@ class ServeMetrics:
         self._t0 = time.perf_counter()
 
     def _now(self) -> float:
-        return time.perf_counter() - (self._t0 or 0.0)
+        # auto-start on the first event: the old `self._t0 or 0.0`
+        # fallback silently recorded ABSOLUTE perf_counter values (epoch
+        # = process start) when start() was never called, poisoning every
+        # wall-latency delta mixed with post-start events
+        if self._t0 is None:
+            self.start()
+        return time.perf_counter() - self._t0
 
     def on_admit(self, req_id: int, tick: int) -> None:
         self._admit[req_id] = {"tick": tick, "wall": self._now()}
+        self.registry.counter(
+            "serve_admitted_total", "requests admitted into slots").inc()
 
     def on_retire(self, req_id: int, tick: int) -> None:
         self._retire[req_id] = {"tick": tick, "wall": self._now()}
+        self.registry.counter(
+            "serve_retired_total", "requests retired at the cut").inc()
+        self.registry.histogram(
+            "serve_latency_ticks", "admit->retire residency in ticks"
+        ).observe(tick - self._admit[req_id]["tick"])
 
     def on_tick(self, active_lanes: int) -> None:
         self.on_window(active_lanes, 1)
 
     def on_window(self, active_lanes: int, ticks: int) -> None:
         """One fused dispatch of ``ticks`` scan ticks with ``active_lanes``
-        lanes live at the window start.  Utilization is sampled per TICK
-        (the host only knows the window-start count — lanes finishing
-        mid-window are still counted, which is exactly the occupancy the
-        device paid for)."""
-        self._windows += 1
+        lanes live at the window start — the window-START occupancy
+        APPROXIMATION (lanes finishing mid-window still count for the
+        whole window).  The engine now reports exact per-tick counts via
+        :meth:`on_window_exact`; this stays for callers without a done
+        stack (and as the comparison baseline in tests)."""
+        self._window_sampled(ticks)
         self._util.extend([active_lanes / max(self.capacity, 1)] * ticks)
+
+    def on_window_exact(self, active_start: int, done_counts) -> None:
+        """Exact per-tick occupancy for one fused window, recovered from
+        the (k, slots) done stack the engine already syncs (no new device
+        round-trip): ``done_counts[j]`` lanes latched AT window tick j, a
+        lane is active THROUGH its finish tick inclusive, so the count at
+        tick j is ``active_start`` minus the lanes finished strictly
+        before j."""
+        counts = np.asarray(done_counts, np.int64)
+        assert int(counts.sum()) <= active_start, \
+            f"{counts.sum()} lanes done in a window that started with " \
+            f"{active_start} active"
+        self._window_sampled(counts.size)
+        retired_before = np.concatenate(([0], np.cumsum(counts[:-1])))
+        act = active_start - retired_before
+        self._util.extend((act / max(self.capacity, 1)).tolist())
+        self.registry.gauge(
+            "serve_active_lanes", "live lanes at the window's last tick"
+        ).set(int(act[-1] - counts[-1]))
+
+    def _window_sampled(self, ticks: int) -> None:
+        self._windows += 1
+        self.registry.counter("serve_windows_total",
+                              "fused scan windows dispatched").inc()
+        self.registry.counter("serve_ticks_total",
+                              "scan ticks executed").inc(ticks)
 
     def on_idle_gap(self, gap: int) -> None:
         """Ticks the engine SKIPPED because no lane was in flight (it
@@ -64,6 +112,9 @@ class ServeMetrics:
         so the jump is visible in the summary instead of silent."""
         if gap > 0:
             self._idle_ticks += gap
+            self.registry.counter(
+                "serve_idle_ticks_total",
+                "ticks skipped with no lane in flight").inc(gap)
 
     def on_boundary_lag(self, lag: int) -> None:
         """Retirement happens at the scan-window boundary; ``lag`` is how
@@ -72,6 +123,10 @@ class ServeMetrics:
         ticks_per_dispatch - 1 by construction — asserted p100 in
         tests/test_serve.py."""
         self._lags.append(lag)
+        self.registry.histogram(
+            "serve_boundary_lag_ticks",
+            "retire boundary minus exact finish tick, per lane",
+            buckets=(0, 1, 2, 4, 8, 16, 32, 64)).observe(lag)
 
     # ------------------------------------------------------------------
     @property
@@ -114,8 +169,9 @@ class ServeMetrics:
                           for r in requests if r.req_id in self._retire],
                          dtype=np.float64)
         if steps_of is None:
-            steps_of = lambda r: (CutPlan(T, r.cut_ratio).n_server_steps,
-                                  CutPlan(T, r.cut_ratio).n_client_steps)
+            def steps_of(r):
+                plan = CutPlan(T, r.cut_ratio)
+                return plan.n_server_steps, plan.n_client_steps
         server_f = client_f = 0.0
         images = 0
         n_served = 0
@@ -160,15 +216,25 @@ class ServeMetrics:
             out["boundary_lag_mean"] = float(lags.mean())
             out["boundary_lag_p100"] = int(lags.max())
         if decisions:
-            out["admission"] = admission_summary(decisions.values())
+            out["admission"] = admission_summary(decisions.values(),
+                                                 registry=self.registry)
         return out
 
 
-def admission_summary(decisions, bins: int = 8) -> Dict:
+def admission_summary(decisions, bins: int = 8, registry=None) -> Dict:
     """Fold AdmissionDecisions into a JSON-able record: action counts plus
     a histogram of the SERVED disclosure KIDs (bumped requests included) —
     the online guarantee "no served request discloses below the floor"
-    made inspectable in ``results/BENCH_privacy.json``."""
+    made inspectable in ``results/BENCH_privacy.json``.
+
+    On a rejects-only iterable the ``disclosure_kid`` key is ABSENT (no
+    served request has a disclosure) — renderers must treat it as
+    optional (``benchmarks.report.privacy_table`` does; regression-tested
+    in tests/test_obs.py).
+
+    ``registry`` (optional :class:`repro.obs.MetricsRegistry`) receives
+    the per-action counts as ``serve_admission_actions_total{action=}``.
+    """
     ds = list(decisions)
     served = [d for d in ds if d.served]
     kids = np.array([d.kid for d in served], np.float64)
@@ -178,6 +244,13 @@ def admission_summary(decisions, bins: int = 8) -> Dict:
         "bumped": sum(1 for d in ds if d.action == "bump"),
         "rejected": sum(1 for d in ds if d.action == "reject"),
     }
+    if registry is not None and registry:
+        actions = registry.counter("serve_admission_actions_total",
+                                   "admission gate outcomes",
+                                   labels=("action",))
+        for act in ("admit", "bump", "reject"):
+            actions.labels(action=act).inc(
+                sum(1 for d in ds if d.action == act))
     if kids.size:
         counts, edges = np.histogram(kids, bins=bins)
         rec["disclosure_kid"] = {

@@ -74,6 +74,8 @@ class FIFOScheduler:
         self._order = {}
         self.admission = admission          # Optional[AdmissionPolicy]
         self._rejections: List[Any] = []    # AdmissionDecisions from select
+        self.aging_promotions = 0           # FIFO never reorders: stays 0
+        self.registry = None                # obs: engine attaches its own
 
     def add(self, req: Request) -> None:
         self._order[req.req_id] = next(self._seq)
@@ -196,6 +198,28 @@ class CutRatioScheduler(FIFOScheduler):
         return sorted(
             self.arrived(now),
             key=lambda r: (self._score(r, now), self._order[r.req_id]))
+
+    def select_window(self, free_slots: int, now: int,
+                      window: int) -> List[Request]:
+        picked = super().select_window(free_slots, now, window)
+        # aging promotions: a pick that outranked a strictly CHEAPER
+        # arrived candidate still queued — pure SJF would have taken the
+        # cheap one first, so the pick's wait-aged score is what won.
+        # The anti-starvation guarantee, made countable.
+        if picked:
+            left = self.arrived(now)
+            if left:
+                floor = min(self.server_cost(r) for r in left)
+                promos = sum(1 for r in picked
+                             if self.server_cost(r) > floor)
+                if promos:
+                    self.aging_promotions += promos
+                    if self.registry is not None:
+                        self.registry.counter(
+                            "serve_aging_promotions_total",
+                            "SJF picks that overtook a cheaper queued "
+                            "request on aged score").inc(promos)
+        return picked
 
 
 def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None,
