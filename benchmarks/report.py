@@ -219,6 +219,36 @@ def obs_table(rec):
           f"window; Chrome trace-event schema validates")
 
 
+def finisher_table(rec):
+    perf = rec.get("perf", {})
+    print(f"streaming client finisher (finish batches overlapped with "
+          f"server scan windows) vs the post-drain reference — "
+          f"{perf.get('n_requests', '?')} in-flight on {rec['slots']} "
+          f"slots, T={rec['T']}, {rec['n_clients']} clients"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| finish mode | wall s | finish s | overlap frac "
+          "| finish batches |")
+    print("|---|---|---|---|---|")
+    if perf:
+        print(f"| drain | {perf['drain_wall_s']:.3f} "
+              f"| {perf['drain_finish_s']:.3f} | 0.00 | 1 |")
+        print(f"| stream (k={perf['k']}, fd={perf['finish_async_depth']}) "
+              f"| {perf['stream_wall_s']:.3f} "
+              f"| {perf['stream_finish_s']:.3f} "
+              f"| {perf['stream_overlap_frac']:.2f} "
+              f"| {perf['stream_finish_batches']} |")
+        print(f"\nend-to-end speedup **{perf['speedup']:.2f}x** "
+              f"(gate: >=1.3x, full run)")
+    tr = rec.get("trace", {})
+    n_bw = len(rec.get("bitwise", {}))
+    print(f"\ngates: streamed x0 bitwise == post-drain reference on "
+          f"{n_bw} configs (k x finish_async_depth x admission on/off); "
+          f"overlap proven from the trace "
+          f"({tr.get('overlapped_finish_spans', 0)}/"
+          f"{tr.get('finish_dispatch_spans', 0)} client_finish_dispatch "
+          f"spans start before the final server dispatch span ends)")
+
+
 # every known BENCH_* record keyed by file stem -> (section title, renderer);
 # scaling is a list, the rest are single records
 _BENCH_SECTIONS = [
@@ -233,6 +263,8 @@ _BENCH_SECTIONS = [
     ("pod_ticks", "§Pod-scale async serving (k-tick scan dispatch)",
      pod_ticks_table),
     ("obs", "§Observability overhead (repro.obs)", obs_table),
+    ("finisher", "§Streaming client finisher (overlapped client segment)",
+     finisher_table),
 ]
 
 
@@ -264,6 +296,12 @@ def _headline(name, rec):
         return ("obs-on ticks/s overhead",
                 f"{rec['overhead_frac'] * 100:+.1f}%",
                 "<=5% (full), bitwise off")
+    if name == "finisher":
+        perf = rec.get("perf", {})
+        return ("wall stream vs drain finish",
+                f"{perf.get('speedup', 0):.2f}x "
+                f"(overlap {perf.get('stream_overlap_frac', 0):.2f})",
+                ">=1.3x (full), bitwise")
     return ("", "", "")
 
 

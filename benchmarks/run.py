@@ -27,6 +27,16 @@ import json
 import os
 import time
 
+# finisher_overlap measures TRUE client/server overlap, which needs the
+# client segment on its own device queue (one CPU device runs XLA
+# programs serially, so a multi-ms finish program head-of-line blocks
+# every eager op behind it).  Two forced host devices model the paper's
+# actual topology — client hardware separate from the server — and are
+# inert for the single-device benches, which never leave device 0.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=2").strip()
+
 import jax
 import jax.numpy as jnp
 
@@ -1087,6 +1097,213 @@ def bench_obs_overhead(args):
     return rec
 
 
+def bench_finisher_overlap(args):
+    """Streaming-client-finisher gate (``finish_mode="stream"``): the
+    client segment dispatched at window boundaries WHILE server scan
+    windows are in flight must change nothing but the clock.
+
+    Gates:
+
+    * DETERMINISTIC (toy + full): streamed ``x0`` is BITWISE equal to the
+      post-drain ``_finish_clients`` reference on mixed DDPM/DDIM traffic
+      across k∈{1,8} x finish_async_depth∈{1,2}, with KID admission ON
+      and OFF (decisions must replay identically too);
+    * DETERMINISTIC (toy + full): a streamed run's exported trace
+      schema-validates and contains >= 1 ``client_finish_dispatch`` span
+      STARTING BEFORE the final server ``dispatch`` span ends — overlap
+      proven from the timeline, not inferred from the clock;
+    * PERF (full only): end-to-end ``serve(requests, client_stack)`` wall
+      >= 1.3x faster streaming vs drain at 256 in-flight requests
+      churning through 32 slots (both warmed, identical workload).
+
+    Writes results/BENCH_finisher.json (uploaded by CI bench-smoke)."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.diffusion.sampler import make_sampler
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.obs import ObsConfig, load_trace, validate_events
+    from repro.optim import adamw
+    from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                             ServeEngine)
+
+    T, K = (10, 5) if args.toy else (50, 10)
+    slots = 8 if args.toy else 32
+    n_req_bitwise = 12 if args.toy else 24
+    n_req_perf = 48 if args.toy else 256
+    k_hot, depth = 8, 2
+    n_clients = 4
+    # full scale runs a heavier backbone: the streamed finisher's win is
+    # real client COMPUTE overlapped/deduplicated, so per-lane-step work
+    # must dominate per-call dispatch overhead (the tiny toy model is
+    # all fixed overhead — fine for the deterministic gates, meaningless
+    # for the clock)
+    size, hidden = (8, 64) if args.toy else (16, 256)
+    shape = (size, size, 1)
+    # client-heavy cuts — the privacy-tier regime (CollaFuse: higher cut
+    # = less disclosure = more of the trajectory on-client): the
+    # finisher segment must be big enough that how it is scheduled
+    # moves the end-to-end clock
+    cut_ratios = (0.7, 0.9, 0.95)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size, hidden=hidden)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    stack = adamw.tree_stack(
+        [init_fn(kk) for kk in
+         jax.random.split(jax.random.PRNGKey(3), n_clients)])
+    samplers = {"ddpm": make_sampler(T),
+                "ddim": make_sampler(T, "ddim", K, eta=0.0)}
+
+    def requests(n):
+        # production-shaped mix: strided DDIM majority (3:1) with dense
+        # DDPM in every slot window.  This is exactly the traffic drain
+        # finishing handles worst — its single batch runs EVERY lane to
+        # the global max step count, so each cheap DDIM lane (a handful
+        # of client steps) pays the dense-DDPM bound; the streamed
+        # finisher's step-homogeneous waves pay only their own bound.
+        return [Request(req_id=i, key=jax.random.fold_in(
+                            jax.random.PRNGKey(7), i),
+                        batch=1, cut_ratio=cut_ratios[i % len(cut_ratios)],
+                        client_idx=i % n_clients,
+                        sampler="ddpm" if i % 4 == 0 else "ddim")
+                for i in range(n)]
+
+    def admission():
+        # median floor over the ddim disclosure profile: a mix of admit
+        # and bump decisions the streamed finisher must replay bitwise
+        calib = jnp.tanh(jax.random.normal(jax.random.PRNGKey(5),
+                                           (8,) + shape))
+        probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
+                                samplers=samplers,
+                                server_fn=functools.partial(apply_fn,
+                                                            server_params))
+        return probe.with_min_kid(float(np.median(probe.profile("ddim"))))
+
+    base_cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                            image_shape=shape, slots=slots,
+                            samplers=samplers, async_depth=depth)
+
+    def engine(mode, k, fdepth, admit, obs=None):
+        return ServeEngine(dataclasses.replace(
+            base_cfg, ticks_per_dispatch=k, finish_mode=mode,
+            finish_async_depth=fdepth,
+            admission=admission() if admit else None, obs=obs),
+            server_params)
+
+    print(f"# finisher_overlap: mixed ddpm/ddim through {slots} slots, "
+          f"T={T}, cuts {cut_ratios} over {n_clients} clients — "
+          f"stream vs drain client finish")
+
+    # ---- gate 1: streamed x0 bitwise == post-drain reference ----------
+    rec = {"scenario": "finisher_overlap", "toy": bool(args.toy),
+           "slots": slots, "T": T, "n_clients": n_clients,
+           "bitwise": {}, "perf": {}, "trace": {}}
+    print("admission,k,finish_async_depth,finish_batches,overlap_frac")
+    for admit in (False, True):
+        for k in (1, k_hot):
+            ref = engine("drain", k, 1, admit).serve(
+                requests(n_req_bitwise), stack)
+            for fdepth in (1, 2):
+                res = engine("stream", k, fdepth, admit).serve(
+                    requests(n_req_bitwise), stack)
+                assert set(res.completions) == set(ref.completions)
+                assert res.decisions == ref.decisions, \
+                    "stream finish changed admission decisions"
+                for rid, comp in ref.completions.items():
+                    got = res.completions[rid]
+                    assert got.client_finished and comp.client_finished
+                    np.testing.assert_array_equal(
+                        got.x_mid, comp.x_mid,
+                        err_msg=f"req {rid} x_mid (admit={admit}, k={k})")
+                    np.testing.assert_array_equal(
+                        got.x0, comp.x0,
+                        err_msg=f"req {rid} x0 (admit={admit}, k={k}, "
+                                f"fdepth={fdepth})")
+                label = (f"admission_{'on' if admit else 'off'}"
+                         f"_k{k}_fd{fdepth}")
+                rec["bitwise"][label] = {
+                    "bitwise_equal": True,
+                    "finish_batches": res.summary["finish_batches"],
+                    "overlap_frac": res.summary["overlap_frac"]}
+                print(f"{'on' if admit else 'off'},{k},{fdepth},"
+                      f"{res.summary['finish_batches']},"
+                      f"{res.summary['overlap_frac']:.2f}")
+    print("bitwise: streamed x0 == post-drain reference on every config",
+          flush=True)
+
+    # ---- gate 2: overlap proven from the exported trace ---------------
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "finisher_trace.json")
+    # perf-sized workload: the coalescing finisher only dispatches
+    # in-loop once a class bucket holds ~two windows' worth of lanes, so
+    # the overlap proof needs enough churn to cross that threshold mid-run
+    engine("stream", k_hot, 2, False,
+           obs=ObsConfig(trace_path=trace_path)).serve(
+        requests(n_req_perf), stack)
+    events = load_trace(trace_path)
+    n_events = validate_events(events)
+    disp = [e for e in events
+            if e.get("ph") == "X" and e["name"] == "dispatch"]
+    fin = [e for e in events
+           if e.get("ph") == "X" and e["name"] == "client_finish_dispatch"]
+    assert disp and fin, "trace missing dispatch/client_finish_dispatch"
+    last_disp_end = max(e["ts"] + e["dur"] for e in disp)
+    overlapped = [e for e in fin if e["ts"] < last_disp_end]
+    assert overlapped, \
+        "no client_finish_dispatch span starts before the final server " \
+        "dispatch span ends — the stream finisher never overlapped"
+    rec["trace"] = {"events": n_events, "dispatch_spans": len(disp),
+                    "finish_dispatch_spans": len(fin),
+                    "overlapped_finish_spans": len(overlapped)}
+    print(f"trace: {n_events} events validate; {len(overlapped)}/"
+          f"{len(fin)} client_finish_dispatch spans start before the "
+          f"final dispatch span ends", flush=True)
+
+    # ---- gate 3: end-to-end wall, stream vs drain (full only) ---------
+    # paired trials: single-run wall on a shared box swings ±20%, and
+    # background load can sit on one mode's whole measurement phase —
+    # so interleave drain/stream runs and take the MEDIAN of per-pair
+    # ratios (drift slower than one pair cancels; no lucky outlier run
+    # decides the gate)
+    eng_d = engine("drain", k_hot, 2, False)
+    eng_s = engine("stream", k_hot, 2, False)
+    eng_d.serve(requests(n_req_perf), stack)          # compile + warmup
+    eng_s.serve(requests(n_req_perf), stack)
+    pairs = [(eng_d.serve(requests(n_req_perf), stack),
+              eng_s.serve(requests(n_req_perf), stack))
+             for _ in range(5)]
+    pairs.sort(key=lambda p: p[0].wall_s / p[1].wall_s)
+    res_drain, res_stream = pairs[len(pairs) // 2]
+    speedup = res_drain.wall_s / res_stream.wall_s
+    s = res_stream.summary
+    rec["perf"] = {
+        "n_requests": n_req_perf, "k": k_hot, "async_depth": depth,
+        "finish_async_depth": 2,
+        "drain_wall_s": res_drain.wall_s,
+        "stream_wall_s": res_stream.wall_s,
+        "drain_finish_s": res_drain.summary["finish_s"],
+        "stream_finish_s": s["finish_s"],
+        "stream_overlap_frac": s["overlap_frac"],
+        "stream_finish_batches": s["finish_batches"],
+        "speedup": speedup}
+    print(f"perf ({n_req_perf} in-flight, k={k_hot}): drain "
+          f"{res_drain.wall_s:.3f}s vs stream {res_stream.wall_s:.3f}s "
+          f"-> {speedup:.2f}x (overlap_frac {s['overlap_frac']:.2f}, "
+          f"{s['finish_batches']} finish batches)", flush=True)
+
+    out = os.path.join(RESULTS, "BENCH_finisher.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out} (+ finisher_trace.json)")
+    if not args.toy:
+        # issue gate: streaming the client finish >= 1.3x end-to-end
+        assert speedup >= 1.3, \
+            f"stream finish only {speedup:.2f}x over drain (< 1.3x)"
+    return rec
+
+
 def bench_kernels(args):
     from repro.diffusion import ddpm as ddpm_mod
     from repro.diffusion.schedule import cosine_schedule
@@ -1185,6 +1402,7 @@ BENCHES = {
     "privacy_admission": bench_privacy_admission,
     "pod_ticks": bench_pod_ticks,
     "obs_overhead": bench_obs_overhead,
+    "finisher_overlap": bench_finisher_overlap,
     "kernels": bench_kernels,
     "masked_step": bench_masked_step,
     "roofline": bench_roofline,

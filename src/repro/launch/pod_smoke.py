@@ -40,6 +40,19 @@ def _parse_args(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--ticks-per-dispatch", type=int, default=4)
     ap.add_argument("--async-depth", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=0,
+                    help="serve with a deterministic stacked client "
+                         "model of this many rows so the CLIENT segment "
+                         "runs too (0 = server segment only, the "
+                         "classic artifact)")
+    ap.add_argument("--finish-mode", choices=["stream", "drain"],
+                    default="stream",
+                    help="with --clients: stream = overlap client finish "
+                         "batches with in-flight server windows; drain = "
+                         "reference post-drain pass (bitwise identical)")
+    ap.add_argument("--finish-async-depth", type=int, default=1,
+                    help="streamed finish batches in flight before the "
+                         "oldest is synced")
     ap.add_argument("--trace-out", default="",
                     help="per-host Chrome trace export: host i writes "
                          "<path>.host<i> with pid=i-tagged events, so "
@@ -76,6 +89,24 @@ def build_world():
     return cosine_schedule(T), apply_fn, server, samplers
 
 
+def build_client_stack(n_clients):
+    """Deterministic [n_clients, ...] stacked private models matching
+    :func:`build_world`'s apply_fn — identical on every process, so the
+    streamed client finish replays bitwise across the pod."""
+    import jax
+
+    from repro.optim import adamw
+    d = SIZE * SIZE
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (d + 8, 32)) / 6.0,
+                "w2": jax.random.normal(k2, (32, d)) / 6.0}
+    return adamw.tree_stack(
+        [one(k) for k in
+         jax.random.split(jax.random.PRNGKey(3), n_clients)])
+
+
 def build_requests(n):
     import jax
 
@@ -88,12 +119,16 @@ def build_requests(n):
 
 
 def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
-              mesh=None, trace_out=""):
+              mesh=None, trace_out="", clients=0, finish_mode="stream",
+              finish_async_depth=1):
     """Build the pod engine and serve the canonical workload; returns the
     ServeResult.  ``mesh=None`` runs hostless (the in-process reference).
     ``trace_out`` turns on obs tracing: each host exports its own
     pid-tagged trace (``<path>.host<i>`` under multiple processes) for a
-    later :func:`repro.obs.merge_traces` into one pod timeline."""
+    later :func:`repro.obs.merge_traces` into one pod timeline.
+    ``clients`` > 0 adds a deterministic stacked client model so the
+    client segment runs too — streamed against in-flight server windows
+    or drained afterwards per ``finish_mode``."""
     from repro.serve import EngineConfig, ObsConfig, ServeEngine
     sched, apply_fn, server, samplers = build_world()
     obs = ObsConfig(trace_path=trace_out) if trace_out else None
@@ -102,8 +137,12 @@ def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
                        ticks_per_dispatch=k, async_depth=depth,
                        hosts=num_processes,
                        host_id=process_id if num_processes > 1 else 0,
+                       finish_mode=finish_mode,
+                       finish_async_depth=finish_async_depth,
                        obs=obs)
-    return ServeEngine(cfg, server).serve(build_requests(n_requests))
+    stack = build_client_stack(clients) if clients else None
+    return ServeEngine(cfg, server).serve(build_requests(n_requests),
+                                          stack)
 
 
 def artifact(res, process_id):
@@ -112,12 +151,17 @@ def artifact(res, process_id):
     for rid, comp in sorted(res.completions.items()):
         owned = [int(i) for i in range(comp.request.batch)
                  if bool(comp.owned[i])]
-        out["completions"][str(rid)] = {
+        rec = {
             "owned": owned,
             "retire_tick": int(comp.retire_tick),
             "rows": {str(i): [float(v) for v in comp.x_mid[i].ravel()]
                      for i in owned},
         }
+        if comp.client_finished:
+            rec["x0_rows"] = {
+                str(i): [float(v) for v in comp.x0[i].ravel()]
+                for i in owned}
+        out["completions"][str(rid)] = rec
     out["summary"] = {kk: res.summary[kk]
                       for kk in ("served", "images", "ticks", "windows")}
     return out
@@ -141,7 +185,14 @@ def main(argv=None):
 
     res = serve_pod(args.num_processes, args.process_id, args.slots,
                     args.requests, args.ticks_per_dispatch,
-                    args.async_depth, mesh=mesh, trace_out=args.trace_out)
+                    args.async_depth, mesh=mesh, trace_out=args.trace_out,
+                    clients=args.clients, finish_mode=args.finish_mode,
+                    finish_async_depth=args.finish_async_depth)
+    if args.clients:
+        s = res.summary
+        print(f"client finish ({s['finish_mode']}): "
+              f"{s['finish_batches']} batch(es), "
+              f"overlap_frac {s['overlap_frac']:.2f}", flush=True)
     if args.trace_out:
         suffix = f".host{args.process_id}" if args.num_processes > 1 else ""
         print(f"wrote trace {args.trace_out}{suffix}", flush=True)

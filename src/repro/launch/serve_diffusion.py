@@ -64,6 +64,18 @@ def _parse_args(argv=None):
                     help="scan windows in flight: 1 = synchronous, 2 = "
                          "double-buffered (dispatch window N+1 while "
                          "window N's done-mask is in flight)")
+    ap.add_argument("--finish-mode", choices=["stream", "drain"],
+                    default="stream",
+                    help="client segment path: stream = dispatch grouped "
+                         "finish batches at each window boundary while "
+                         "later server windows are in flight (default); "
+                         "drain = one reference pass after the server "
+                         "queue empties.  x0 is bitwise identical either "
+                         "way")
+    ap.add_argument("--finish-async-depth", type=int, default=1,
+                    help="streamed finish batches in flight before the "
+                         "oldest is synced (the client-segment analogue "
+                         "of --async-depth)")
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="0 = all at tick 0; k = one request every k ticks")
     ap.add_argument("--devices", type=int, default=0,
@@ -179,7 +191,8 @@ def main(argv=None):
             step_backend=args.step_backend, mesh=mesh, samplers=samplers,
             admission=admission,
             ticks_per_dispatch=args.ticks_per_dispatch,
-            async_depth=args.async_depth, obs=obs)
+            async_depth=args.async_depth, finish_mode=args.finish_mode,
+            finish_async_depth=args.finish_async_depth, obs=obs)
         eng = ServeEngine(cfg, server_params)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
@@ -191,6 +204,10 @@ def main(argv=None):
               f"p50/p95 latency {s['latency_ticks_p50']:.0f}/"
               f"{s['latency_ticks_p95']:.0f} ticks | "
               f"util {s['utilization_mean']:.2f}", flush=True)
+        print(f"client finish ({s['finish_mode']}): "
+              f"{s['finish_s'] * 1e3:.1f}ms in {s['finish_batches']} "
+              f"batch(es), overlap_frac {s['overlap_frac']:.2f} "
+              f"(tail {s['finish_tail_s'] * 1e3:.1f}ms)", flush=True)
         if admission is not None:
             a = s["admission"]
             dk = a.get("disclosure_kid", {})

@@ -5,7 +5,12 @@ sample per tick; :meth:`ServeMetrics.summary` folds them into the record
 written to ``results/BENCH_serve.json`` (requests/s, p50/p95 latency,
 mean slot utilization, and the server/client FLOP accounting via
 :func:`repro.core.collafuse.flops_split` — the paper's H2c energy proxy
-applied to inference traffic).  Under a KID admission gate the summary
+applied to inference traffic).  When a client stack is served the summary
+also carries :func:`finish_summary` — overlap-aware accounting for the
+client segment (``finish_s``/``overlap_frac``/``finish_batches``), which
+distinguishes the streamed finisher (client batches overlapped with
+server scan windows) from the post-drain reference path.  Under a KID
+admission gate the summary
 grows an ``admission`` section (:func:`admission_summary`): action counts
 and the served disclosure-KID histogram, with rejected requests excluded
 from the FLOP accounting (they never ran a model call).
@@ -40,6 +45,8 @@ class ServeMetrics:
         self._windows = 0                       # fused-dispatch count
         self._idle_ticks = 0                    # ticks skipped while empty
         self._lags: List[int] = []              # retire boundary - exact tick
+        self._finish_batches = 0                # streamed client-finish calls
+        self._finish_lanes = 0
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -115,6 +122,24 @@ class ServeMetrics:
             self.registry.counter(
                 "serve_idle_ticks_total",
                 "ticks skipped with no lane in flight").inc(gap)
+
+    def on_finish_dispatch(self, n_requests: int, lanes: int) -> None:
+        """One streamed client-finish batch dispatched (finish_mode=
+        "stream"): ``n_requests`` freshly-retired requests, grouped by
+        client and padded, handed to the finisher program while server
+        windows may still be in flight."""
+        self._finish_batches += 1
+        self._finish_lanes += lanes
+        self.registry.counter(
+            "serve_finish_batches_total",
+            "streamed client-finish batches dispatched").inc()
+        self.registry.counter(
+            "serve_finish_lanes_total",
+            "lanes handed to the streaming client finisher").inc(lanes)
+        self.registry.histogram(
+            "serve_finish_batch_requests",
+            "requests per streamed client-finish batch",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128)).observe(n_requests)
 
     def on_boundary_lag(self, lag: int) -> None:
         """Retirement happens at the scan-window boundary; ``lag`` is how
@@ -219,6 +244,36 @@ class ServeMetrics:
             out["admission"] = admission_summary(decisions.values(),
                                                  registry=self.registry)
         return out
+
+
+def finish_summary(mode: str, finish_s: float, tail_s: float = 0.0,
+                   batches: int = 0, lanes: int = 0) -> Dict:
+    """Overlap-aware accounting for the client-finish segment, merged
+    into the serve summary by the engine.
+
+    ``finish_s`` is the TOTAL host time spent in the client-finish path
+    (pack + dispatch + sync).  In ``stream`` mode most of it runs while
+    server scan windows are still in flight; the only serialized part is
+    ``tail_s`` — the drain after the last window retired — so
+    ``overlap_frac = 1 - tail_s / finish_s``.  In ``drain`` mode the
+    whole segment runs after the server loop (``overlap_frac = 0``) and
+    the CALLER adds ``finish_s`` to the wall clock; in stream mode the
+    loop timer already covers the finish work, so throughput derived
+    from that single wall never double-counts."""
+    assert mode in ("stream", "drain"), mode
+    if mode == "drain":
+        overlap = 0.0
+        tail_s = finish_s
+    else:
+        overlap = 1.0 - tail_s / finish_s if finish_s > 1e-12 else 1.0
+    return {
+        "finish_mode": mode,
+        "finish_s": finish_s,
+        "finish_tail_s": tail_s,
+        "overlap_frac": float(min(1.0, max(0.0, overlap))),
+        "finish_batches": batches,
+        "finish_lanes": lanes,
+    }
 
 
 def admission_summary(decisions, bins: int = 8, registry=None) -> Dict:

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass(eq=False)
@@ -76,6 +76,34 @@ class FIFOScheduler:
         self._rejections: List[Any] = []    # AdmissionDecisions from select
         self.aging_promotions = 0           # FIFO never reorders: stays 0
         self.registry = None                # obs: engine attaches its own
+        self._retired_cbs: List[Callable] = []
+
+    # -- retired-request callbacks --------------------------------------
+    def on_retired(self, cb: Callable) -> Callable[[], None]:
+        """Register ``cb(request, tick)`` to fire when a request's LAST
+        lane retires (the engine calls :meth:`notify_retired` at the
+        window boundary that completed it, and at the local drain for
+        zero-server-step requests).  This is the hand-off point the
+        streaming client finisher subscribes to — but it is a general
+        hook: autoscalers, per-client accounting, or cache eviction can
+        listen without touching the engine loop.  Returns an unsubscribe
+        callable (idempotent); subscribers that live shorter than the
+        scheduler MUST call it (the engine's stream finisher does, per
+        ``serve()`` call)."""
+        self._retired_cbs.append(cb)
+
+        def _unsubscribe():
+            try:
+                self._retired_cbs.remove(cb)
+            except ValueError:
+                pass
+        return _unsubscribe
+
+    def notify_retired(self, req: Request, tick: int) -> None:
+        """Fire every :meth:`on_retired` callback for one fully-retired
+        request.  Called by the engine; no-op with no subscribers."""
+        for cb in tuple(self._retired_cbs):
+            cb(req, tick)
 
     def add(self, req: Request) -> None:
         self._order[req.req_id] = next(self._seq)

@@ -531,3 +531,192 @@ def test_pod_smoke_two_process_distributed(tmp_path):
         assert c0["retire_tick"] == c1["retire_tick"] == rc["retire_tick"]
         for i, row in {**c0["rows"], **c1["rows"]}.items():
             assert row == rc["rows"][i], (rid, i)
+
+
+# ---------------------------------------------------------------------------
+# streaming client finisher (PR 8 tentpole): stream ≡ drain, bitwise
+# ---------------------------------------------------------------------------
+def _finisher_reqs():
+    """Mixed DDPM/DDIM, staggered arrivals, repeated client_idx (so finish
+    batches group), PLUS local-only c=1.0 requests that complete at
+    arrival — every staging path into the finish pipeline."""
+    return [Request(req_id=i,
+                    key=jax.random.fold_in(jax.random.PRNGKey(4321), i),
+                    batch=1 + i % 2,
+                    cut_ratio=(0.25, 0.5, 0.75, 1.0)[i % 4],
+                    client_idx=i % 3, arrival_tick=i % 5,
+                    sampler=("ddpm", "ddim6")[i % 2])
+            for i in range(9)]
+
+
+@pytest.mark.parametrize("k,depth,fdepth", [(1, 1, 1), (4, 2, 1),
+                                            (8, 2, 2), (4, 1, 3)])
+def test_stream_finish_bitwise_equal_to_drain(models, k, depth, fdepth):
+    """The tentpole gate: streaming the client segment against in-flight
+    server windows changes ONLY timing — x_mid and x0 are bitwise equal
+    to the post-drain reference, because each lane's numerics depend only
+    on its key chain, never on which finish batch carried it."""
+    sched, server, stack = models
+    ref = _engine(sched, server, samplers=_mixed_menu(),
+                  ticks_per_dispatch=k, async_depth=depth,
+                  finish_mode="drain").serve(_finisher_reqs(), stack)
+    res = _engine(sched, server, samplers=_mixed_menu(),
+                  ticks_per_dispatch=k, async_depth=depth,
+                  finish_mode="stream",
+                  finish_async_depth=fdepth).serve(_finisher_reqs(), stack)
+    assert set(res.completions) == set(ref.completions)
+    for rid, comp in ref.completions.items():
+        got = res.completions[rid]
+        assert got.client_finished and comp.client_finished
+        np.testing.assert_array_equal(got.x_mid, comp.x_mid,
+                                      err_msg=f"x_mid {rid}")
+        np.testing.assert_array_equal(got.x0, comp.x0,
+                                      err_msg=f"x0 {rid}")
+    assert ref.summary["finish_mode"] == "drain"
+    assert ref.summary["overlap_frac"] == 0.0
+    assert res.summary["finish_mode"] == "stream"
+    assert 0.0 <= res.summary["overlap_frac"] <= 1.0
+    assert res.summary["finish_batches"] >= 1
+    assert res.summary["finish_async_depth"] == fdepth
+
+
+def test_stream_finish_bitwise_under_admission_gate(models,
+                                                    gated_mixed_ref):
+    """Stream ≡ drain also when the KID gate rewrites cuts (bumped
+    requests finish MORE client steps) and rejects requests mid-queue.
+    The module reference fixture runs the default stream mode, so a drain
+    run against it proves both directions."""
+    sched, server, stack = models
+    mk_pol, ref = gated_mixed_ref
+    res = _engine(sched, server, samplers=_mixed_menu(),
+                  admission=mk_pol(), ticks_per_dispatch=8, async_depth=2,
+                  finish_mode="drain").serve(_mixed_reqs(), stack)
+    assert res.decisions == ref.decisions
+    assert set(res.completions) == set(ref.completions)
+    for rid, comp in ref.completions.items():
+        np.testing.assert_array_equal(res.completions[rid].x0, comp.x0,
+                                      err_msg=f"x0 {rid}")
+
+
+def test_drain_local_batches_one_draw_per_boundary(models):
+    """Local-only (c=1.0) requests due at the same boundary share ONE
+    vmapped x_T draw — and each lane's slice is bitwise the independent
+    per-lane draw the engine's key discipline promises."""
+    sched, server, stack = models
+    reqs = [Request(req_id=i,
+                    key=jax.random.fold_in(jax.random.PRNGKey(31), i),
+                    batch=1 + i % 3, cut_ratio=1.0, client_idx=i % 3,
+                    arrival_tick=(0, 0, 0, 4)[i])
+            for i in range(4)]
+    res = _engine(sched, server, samplers=_mixed_menu()).serve(reqs, stack)
+    for r in reqs:
+        comp = res.completions[r.req_id]
+        assert comp.retire_tick >= r.arrival_tick
+        k_init, _, k_cli = collafuse.lane_keys(r.key, r.batch)
+        x_T = jax.vmap(lambda kk: jax.random.normal(
+            kk, SHAPE, jnp.float32))(k_init)
+        np.testing.assert_array_equal(comp.x_mid, np.asarray(x_T),
+                                      err_msg=f"x_T req {r.req_id}")
+        assert comp.client_finished
+
+
+def test_scheduler_retired_callbacks():
+    """on_retired subscribes, notify_retired fans out in subscription
+    order, and the returned unsubscriber is idempotent."""
+    s = FIFOScheduler()
+    seen_a, seen_b = [], []
+    unsub_a = s.on_retired(lambda r, t: seen_a.append((r.req_id, t)))
+    s.on_retired(lambda r, t: seen_b.append((r.req_id, t)))
+    r = Request(req_id=7, key=jax.random.PRNGKey(0), cut_ratio=0.5)
+    s.notify_retired(r, 12)
+    assert seen_a == [(7, 12)] and seen_b == [(7, 12)]
+    unsub_a()
+    unsub_a()                      # second call is a no-op, not an error
+    s.notify_retired(r, 16)
+    assert seen_a == [(7, 12)]
+    assert seen_b == [(7, 12), (7, 16)]
+
+
+def test_warmup_prefix_one_request_per_compile_key():
+    """warmup_prefix keeps the FIRST request of every distinct
+    (batch, sampler, cut_ratio) compile key and drops the rest."""
+    from repro.serve.engine import warmup_prefix
+    key = jax.random.PRNGKey(0)
+    reqs = [Request(req_id=i, key=jax.random.fold_in(key, i),
+                    batch=(1, 2, 1, 2)[i % 4],
+                    cut_ratio=(0.5, 0.5, 0.25, 0.5)[i % 4],
+                    sampler=("ddpm", "ddpm", "ddpm", "ddim6")[i % 4])
+            for i in range(12)]
+    prefix = warmup_prefix(reqs)
+    keys = [(r.batch, r.sampler, r.cut_ratio) for r in prefix]
+    assert len(keys) == len(set(keys)) == 4
+    assert [r.req_id for r in prefix] == [0, 1, 2, 3]
+    assert warmup_prefix(prefix) == prefix
+
+
+def test_engine_config_finish_knob_validation(models):
+    sched, server, _ = models
+    with pytest.raises(AssertionError, match="finish_mode"):
+        _engine(sched, server, finish_mode="eager")
+    with pytest.raises(AssertionError, match="finish_async_depth"):
+        _engine(sched, server, finish_async_depth=0)
+    with pytest.raises(AssertionError, match="finish_async_depth"):
+        _engine(sched, server, finish_async_depth=33)
+
+
+# ---------------------------------------------------------------------------
+# _host_rows: the non-fully-addressable shard walk (pod fast path)
+# ---------------------------------------------------------------------------
+class _FakeShard:
+    """One addressable shard: index like a real jax Shard (tuple of
+    slices, leading slot axis), data = the covered rows."""
+
+    def __init__(self, sl, full):
+        self.index = (sl,) + (slice(None),) * (full.ndim - 1)
+        self.data = full[sl]
+
+
+class _FakeShardedArray:
+    """Duck-typed globally-sharded array: NOT fully addressable, exposes
+    only the shards this host holds."""
+
+    is_fully_addressable = False
+
+    def __init__(self, full, shard_slices):
+        self.shape = full.shape
+        self.addressable_shards = [_FakeShard(sl, full) for sl in
+                                   shard_slices]
+
+
+def test_host_rows_walks_partial_shards(models):
+    """Pod host 0 of 2 over 4 slots owns lanes {0, 1}.  Against a
+    non-fully-addressable array it must copy owned rows out of whichever
+    addressable shards cover them — including shards whose slice has
+    None endpoints — skip shards with no owned hits, and never
+    materialize un-owned lanes even when their rows are addressable."""
+    sched, server, _ = models
+    eng = _engine(sched, server, slots=4, hosts=2, host_id=0)
+    assert eng._lane_owned.tolist() == [True, True, False, False]
+    full = np.arange(4 * SIZE * SIZE, dtype=np.float32).reshape(
+        (4,) + SHAPE)
+    # shard layout: [None:2) and [2:None) — boundary lane 1 sits at the
+    # first shard's stop-1, lane 2 (un-owned) at the second's start
+    arr = _FakeShardedArray(full, [slice(None, 2), slice(2, None)])
+    rows = eng._host_rows(arr, [0, 1, 2, 3])
+    assert sorted(rows) == [0, 1]
+    for ln in (0, 1):
+        np.testing.assert_array_equal(rows[ln], full[ln])
+    # empty-hit shard: host addresses ONLY rows it doesn't own
+    assert eng._host_rows(_FakeShardedArray(full, [slice(2, 4)]),
+                          [2, 3]) == {}
+    # no owned lanes requested at all -> no shard walk, empty dict
+    assert eng._host_rows(arr, [2, 3]) == {}
+    # single shard with both endpoints None covers everything
+    rows_all = eng._host_rows(_FakeShardedArray(full, [slice(None, None)]),
+                              [0, 1, 2, 3])
+    assert sorted(rows_all) == [0, 1]
+    # and the fully-addressable gather path returns the same rows
+    rows_fast = eng._host_rows(jnp.asarray(full), [0, 1, 2, 3])
+    assert sorted(rows_fast) == [0, 1]
+    for ln in (0, 1):
+        np.testing.assert_array_equal(rows_fast[ln], rows[ln])

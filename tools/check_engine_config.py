@@ -1,28 +1,47 @@
-"""Lint: every ServeEngine construction must go through EngineConfig.
+"""Lint: every ServeEngine call site must use the config-era API.
 
-The legacy keyword constructor ``ServeEngine(sched, apply_fn,
-server_params, image_shape, **knobs)`` is a one-release deprecation shim;
-new call sites must build an :class:`EngineConfig` and call
-``ServeEngine(config, server_params)``.  This walks the AST of every
-Python file under src/, examples/, benchmarks/, and tests/ and flags any
-``ServeEngine(...)`` call that doesn't fit the two-positional-args,
-no-keywords config form.  ``tests/test_engine_config.py`` is allowlisted —
-it is the shim's coverage.
+Two deprecated surfaces are flagged, both one-release shims:
+
+* the legacy keyword constructor ``ServeEngine(sched, apply_fn,
+  server_params, image_shape, **knobs)`` — new call sites must build an
+  :class:`EngineConfig` and call ``ServeEngine(config, server_params)``;
+* the legacy three-call serving surface ``engine.run(requests)`` /
+  ``engine.finish_clients(result, stack)`` — both folded into the single
+  ``engine.serve(requests, client_stack)`` entrypoint (which also
+  streams the client segment; the old pair cannot).
+
+This walks the AST of every Python file under src/, examples/,
+benchmarks/, and tests/.  ``.finish_clients(...)`` is flagged on any
+receiver; ``.run(...)`` only on engine-shaped receivers (a name matching
+``eng``/``engine``/``serve_engine`` or a direct ``ServeEngine(...)``
+result) so ``subprocess.run(...)`` and friends never false-positive.
+``tests/test_engine_config.py`` is allowlisted — it is the shims'
+coverage.
 
     python tools/check_engine_config.py          # exit 1 on findings
 """
 import ast
 import os
+import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCAN_DIRS = ("src", "examples", "benchmarks", "tests")
 ALLOWLIST = {os.path.join("tests", "test_engine_config.py")}
+# receiver names that unambiguously hold a ServeEngine — `.run(` is too
+# common a method name (subprocess.run, ...) to flag on every receiver
+_ENGINE_NAME = re.compile(r"^(eng|engine|serve_engine)\w*$")
 
 
 def _is_serve_engine(func) -> bool:
     return (isinstance(func, ast.Name) and func.id == "ServeEngine") or \
         (isinstance(func, ast.Attribute) and func.attr == "ServeEngine")
+
+
+def _engine_receiver(value) -> bool:
+    if isinstance(value, ast.Name) and _ENGINE_NAME.match(value.id):
+        return True
+    return isinstance(value, ast.Call) and _is_serve_engine(value.func)
 
 
 def check_file(path: str, rel: str):
@@ -33,13 +52,28 @@ def check_file(path: str, rel: str):
             return [(rel, e.lineno or 0, f"syntax error: {e.msg}")]
     findings = []
     for node in ast.walk(tree):
-        if not (isinstance(node, ast.Call) and _is_serve_engine(node.func)):
+        if not isinstance(node, ast.Call):
             continue
-        if len(node.args) > 2 or node.keywords:
+        if _is_serve_engine(node.func):
+            if len(node.args) > 2 or node.keywords:
+                findings.append(
+                    (rel, node.lineno,
+                     "legacy ServeEngine(...) call — construct an "
+                     "EngineConfig and call ServeEngine(config, "
+                     "server_params)"))
+            continue
+        if not isinstance(node.func, ast.Attribute):
+            continue
+        if node.func.attr == "finish_clients":
             findings.append(
                 (rel, node.lineno,
-                 "legacy ServeEngine(...) call — construct an EngineConfig "
-                 "and call ServeEngine(config, server_params)"))
+                 "deprecated engine.finish_clients(...) — pass "
+                 "client_stack to engine.serve(requests, client_stack)"))
+        elif node.func.attr == "run" and _engine_receiver(node.func.value):
+            findings.append(
+                (rel, node.lineno,
+                 "deprecated engine.run(...) — call "
+                 "engine.serve(requests)"))
     return findings
 
 
