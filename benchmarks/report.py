@@ -219,6 +219,33 @@ def obs_table(rec):
           f"window; Chrome trace-event schema validates")
 
 
+def hetero_table(rec):
+    print(f"trajectory-aware wave packing + spare-column dynamic menus — "
+          f"{rec['n_requests']} requests (samplers "
+          f"{'/'.join(rec['samplers'])}) on {rec['slots']} slots, "
+          f"T={rec['T']}, k={rec['k']}, async_depth={rec['async_depth']}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| packing | ticks to drain | wall s | fragmentation frac |")
+    print("|---|---|---|---|")
+    print(f"| off | {rec['ticks_off']} | {rec['wall_s_off']:.3f} "
+          f"| {rec['fragmentation_frac_off']:.4f} |")
+    print(f"| on | {rec['ticks_on']} | {rec['wall_s_on']:.3f} "
+          f"| {rec['fragmentation_frac_on']:.4f} |")
+    occ = rec.get("occupancy_by_class_on", {})
+    if occ:
+        total = sum(occ.values()) or 1
+        print("\npacked occupancy by trajectory class (lane-ticks):")
+        print("\n| class | lane-ticks | share |")
+        print("|---|---|---|")
+        for cls, lt in sorted(occ.items(), key=lambda kv: -kv[1]):
+            print(f"| {cls} | {lt} | {lt / total * 100:.1f}% |")
+    print(f"\nticks-to-drain ratio **{rec['ticks_to_drain_ratio']:.2f}x** "
+          f"(gate: >=1.3x, full run); completions bitwise-equal packing "
+          f"on/off; dynamic sampler registration compiled "
+          f"{rec['dynamic_menu_new_compiles']} new scan programs "
+          f"(gate: 0)")
+
+
 def finisher_table(rec):
     perf = rec.get("perf", {})
     print(f"streaming client finisher (finish batches overlapped with "
@@ -262,6 +289,8 @@ _BENCH_SECTIONS = [
      masked_step_table),
     ("pod_ticks", "§Pod-scale async serving (k-tick scan dispatch)",
      pod_ticks_table),
+    ("hetero", "§Heterogeneous-traffic packing (waves + dynamic menus)",
+     hetero_table),
     ("obs", "§Observability overhead (repro.obs)", obs_table),
     ("finisher", "§Streaming client finisher (overlapped client segment)",
      finisher_table),
@@ -292,6 +321,13 @@ def _headline(name, rec):
         worst = min(m["ticks_per_s_ratio"] for m in rec["modes"].values())
         return ("worst ticks/s k-scan vs sync", f"{worst:.2f}x",
                 ">=2x (full), bitwise")
+    if name == "hetero":
+        return ("ticks-to-drain packed vs not",
+                f"{rec['ticks_to_drain_ratio']:.2f}x (frag "
+                f"{rec['fragmentation_frac_off']:.3f}->"
+                f"{rec['fragmentation_frac_on']:.3f}, "
+                f"{rec['dynamic_menu_new_compiles']} menu compiles)",
+                ">=1.3x (full), bitwise, 0 compiles")
     if name == "obs":
         return ("obs-on ticks/s overhead",
                 f"{rec['overhead_frac'] * 100:+.1f}%",

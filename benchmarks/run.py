@@ -920,6 +920,144 @@ def bench_pod_ticks(args):
     return rec
 
 
+def bench_hetero_packing(args):
+    """Heterogeneous-traffic gate: trajectory-aware wave packing
+    (``pack=True``) + spare-column dynamic sampler menus.  A mixed
+    workload — dense DDPM, DDIM-25 and DDIM-10 trajectories across
+    several cuts, batch sizes 1/4/8 interleaved so big dense heads block
+    ragged frees — runs through the k-tick engine twice:
+
+    * packing OFF vs ON must be BITWISE-equal per request (packing moves
+      admission ticks, never numerics);
+    * (full run) packing ON drains the same workload in >= 1.3x fewer
+      engine ticks — the unpacked run leaks its freed slots to
+      head-of-line blocking, measured as ``fragmentation_frac``;
+    * registering an AD-HOC sampler between serves adds ZERO compiles of
+      the masked-step scan program (``_tick`` jit cache-size assert): the
+      trajectory menu is traced data in preallocated spare columns, not a
+      closure constant.
+
+    Writes results/BENCH_hetero.json (rendered by ``benchmarks.report
+    --all``; uploaded by the CI bench-smoke job)."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.diffusion.sampler import make_sampler
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.serve import EngineConfig, FIFOScheduler, Request, ServeEngine
+
+    T = 12 if args.toy else 50
+    slots = 8 if args.toy else 32
+    n_req = 48 if args.toy else 256
+    k_hot, depth = 5, 2
+    size = 8
+    shape = (size, size, 1)
+    init_fn, apply_fn = _tiny_mlp_eps_model(size)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    k_fine, k_coarse = (6, 4) if args.toy else (25, 10)
+    statics = {"ddpm": make_sampler(T),
+               f"ddim{k_fine}": make_sampler(T, "ddim", k_fine, eta=0.0),
+               f"ddim{k_coarse}": make_sampler(T, "ddim", k_coarse,
+                                               eta=0.0)}
+    k_dyn = 3 if args.toy else 7
+    dyn_name = f"ddim{k_dyn}"
+    dyn = make_sampler(T, "ddim", k_dyn, eta=0.0)
+
+    filler_classes = [(f"ddim{k_fine}", 0.2), (f"ddim{k_coarse}", 0.8),
+                      (f"ddim{k_fine}", 0.8), (dyn_name, 0.5)]
+    head_batch = slots
+
+    def requests(salt):
+        # every 3rd request is a BIG dense head (batch = the whole pool,
+        # 80% of the chain); between them, batch-1 fillers whose class
+        # ROTATES per request, so the unpacked FIFO walk runs maximally
+        # mixed cohorts whose ragged frees strand behind each blocked
+        # head — packing coalesces the fillers into same-class waves and
+        # back-fills the budget the heads cannot use yet
+        reqs, filler_i = [], 0
+        for i in range(n_req):
+            if i % 3 == 2:
+                sampler, cut, batch = "ddpm", 0.2, head_batch
+            else:
+                sampler, cut = filler_classes[filler_i
+                                              % len(filler_classes)]
+                batch, filler_i = 1, filler_i + 1
+            reqs.append(Request(
+                req_id=i, key=jax.random.fold_in(
+                    jax.random.PRNGKey(salt), i),
+                batch=batch, cut_ratio=cut, sampler=sampler))
+        return reqs
+
+    base_cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                            image_shape=shape, slots=slots,
+                            samplers=statics, spare_columns=k_dyn + 1,
+                            ticks_per_dispatch=k_hot, async_depth=depth)
+
+    def run(pack):
+        eng = ServeEngine(dataclasses.replace(
+            base_cfg, scheduler=FIFOScheduler(pack=pack)), server_params)
+        eng.register_sampler(dyn_name, dyn)
+        eng.serve(requests(3))                      # compile + warmup
+        n_compiled = eng._tick._cache_size()
+        # ad-hoc re-registration at the serve boundary: the measured run
+        # prices/serves the fresh menu with ZERO new scan compiles
+        eng.register_sampler(dyn_name, make_sampler(T, "ddim", k_dyn,
+                                                    eta=0.0))
+        res = eng.serve(requests(7))
+        assert eng._tick._cache_size() == n_compiled, \
+            "dynamic sampler registration recompiled the scan program"
+        return res
+
+    print(f"# hetero_packing: {n_req} requests (batch-1 fillers + "
+          f"batch-{head_batch} dense heads; ddpm + ddim{k_fine}/"
+          f"ddim{k_coarse}/{dyn_name} across cuts) on {slots} slots, "
+          f"T={T}, k={k_hot} depth={depth}")
+    print("packing,ticks,wall_s,fragmentation_frac")
+    res_off = run(pack=False)
+    res_on = run(pack=True)
+    assert set(res_on.completions) == set(res_off.completions)
+    for rid, comp in res_off.completions.items():
+        np.testing.assert_array_equal(res_on.completions[rid].x_mid,
+                                      comp.x_mid, err_msg=f"req {rid}")
+    ratio = res_off.summary["ticks"] / max(res_on.summary["ticks"], 1)
+    for label, res in (("off", res_off), ("on", res_on)):
+        print(f"{label},{res.summary['ticks']},{res.wall_s:.3f},"
+              f"{res.summary['fragmentation_frac']:.4f}")
+    print(f"packing: bitwise equal, ticks-to-drain {ratio:.2f}x, "
+          f"0 new compiles", flush=True)
+    rec = {"scenario": "hetero_packing", "toy": bool(args.toy),
+           "slots": slots, "n_requests": n_req, "T": T, "k": k_hot,
+           "async_depth": depth,
+           "samplers": sorted(statics) + [dyn_name],
+           "bitwise_equal": True, "dynamic_menu_new_compiles": 0,
+           "ticks_off": res_off.summary["ticks"],
+           "ticks_on": res_on.summary["ticks"],
+           "ticks_to_drain_ratio": ratio,
+           "wall_s_off": res_off.wall_s, "wall_s_on": res_on.wall_s,
+           "fragmentation_frac_off":
+               res_off.summary["fragmentation_frac"],
+           "fragmentation_frac_on": res_on.summary["fragmentation_frac"],
+           "occupancy_by_class_on":
+               res_on.summary["occupancy_by_class"]}
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_hetero.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out}")
+    if not args.toy:
+        # issue gate: step-homogeneous waves drain the mixed workload in
+        # >= 1.3x fewer ticks than the head-of-line-blocked unpacked walk
+        assert ratio >= 1.3, \
+            f"wave packing only {ratio:.2f}x ticks-to-drain"
+        assert (res_on.summary["fragmentation_frac"] <=
+                res_off.summary["fragmentation_frac"]), "packing raised " \
+            "fragmentation: free slots while demand waits"
+    return rec
+
+
 def bench_obs_overhead(args):
     """Observability-cost gate: the ``repro.obs`` stack (tracing + metrics
     registry + per-request timelines) threaded through the k-tick
@@ -1401,6 +1539,7 @@ BENCHES = {
     "ddim_speedup": bench_ddim_speedup,
     "privacy_admission": bench_privacy_admission,
     "pod_ticks": bench_pod_ticks,
+    "hetero_packing": bench_hetero_packing,
     "obs_overhead": bench_obs_overhead,
     "finisher_overlap": bench_finisher_overlap,
     "kernels": bench_kernels,

@@ -102,13 +102,27 @@ class StepBackend:
         return jnp.where(m, x_new, x)
 
 
-def make_lane_tick(apply_fn: Callable, masked_index: Callable, offsets,
-                   ts_pad, kmax: int, image_shape) -> Callable:
+def make_lane_tick(apply_fn: Callable, masked_index: Callable, kmax: int,
+                   image_shape) -> Callable:
     """Build the SCAN-COMPATIBLE masked lane tick every hot loop shares.
 
     One tick of a slot array walking heterogeneous trajectories:
 
-        x, pos, key, done = lane_tick(params, x, pos, key, end, traj, gate)
+        x, pos, key, done = lane_tick(params, menu, x, pos, key, end,
+                                      traj, gate)
+
+    ``menu`` is the trajectory-menu state, a dict of ARRAYS traced at call
+    time (not closed over as constants): ``tables`` — the (4, C)
+    concatenated coefficient table gathered per-lane by column —
+    ``offsets`` — each trajectory's first column — and ``ts_pad`` — the
+    (n_menu, kmax) padded timestep rows the model conditions on.  Passing
+    the menu as data is what makes DYNAMIC sampler registration
+    retrace-free: the serving engine preallocates spare columns/rows
+    (``EngineConfig.spare_columns``), writes an ad-hoc trajectory's
+    coefficients into them with one device scatter, and every jitted
+    program built on this tick keeps its cache (shapes never change —
+    asserted via jit cache sizes in ``benchmarks.run --only
+    hetero_packing``).
 
     ``gate`` is the caller's liveness mask (engine: the slot's ``active``
     flag; finisher: the padding-lane ``valid`` flag).  A lane steps only
@@ -119,24 +133,25 @@ def make_lane_tick(apply_fn: Callable, masked_index: Callable, offsets,
     per dispatch and retiring at the scan boundary reads the same ``x`` the
     lane had at its cut — bit-for-bit, at any k.
 
-    The function is pure in (carry, params) with every table closed over as
-    a constant, so it traces once whether the caller wraps it in
-    ``lax.scan`` (the engine's k-tick window), ``lax.fori_loop`` (the
-    client finisher) or calls it directly.  ``masked_index`` is the
-    StepBackend's ``masked_index_step`` partial — backend choice stays a
-    construction-time decision.
+    The function is pure in (carry, params, menu), so it traces once
+    whether the caller wraps it in ``lax.scan`` (the engine's k-tick
+    window), ``lax.fori_loop`` (the client finisher) or calls it
+    directly.  ``masked_index`` is the StepBackend's ``masked_index_step``
+    partial (minus ``tables``, supplied per call from the menu) — backend
+    choice stays a construction-time decision.
     """
-    def lane_tick(params, x, pos, key, end, traj, gate):
+    def lane_tick(params, menu, x, pos, key, end, traj, gate):
         stepping = gate & (pos < end)
         pos_c = jnp.clip(pos, 0, kmax - 1)
-        t_lane = ts_pad[traj, pos_c]          # model conditions on t
+        t_lane = menu["ts_pad"][traj, pos_c]  # model conditions on t
         eps_hat = apply_fn(params, x, t_lane)
         ks = jax.vmap(jax.random.split)(key)
         k_next, k_n = ks[:, 0], ks[:, 1]
         noise = jax.vmap(
             lambda k: jax.random.normal(k, image_shape, jnp.float32))(k_n)
-        cols = offsets[traj] + pos_c
-        x = masked_index(x, cols, eps_hat, noise, stepping)
+        cols = menu["offsets"][traj] + pos_c
+        x = masked_index(x, cols, eps_hat, noise, stepping,
+                         tables=menu["tables"])
         pos = jnp.where(stepping, pos + 1, pos)
         key = jnp.where(stepping[:, None], k_next, key)
         done = stepping & (pos >= end)        # x now holds the cut tensor

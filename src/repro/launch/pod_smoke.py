@@ -53,6 +53,11 @@ def _parse_args(argv=None):
     ap.add_argument("--finish-async-depth", type=int, default=1,
                     help="streamed finish batches in flight before the "
                          "oldest is synced")
+    ap.add_argument("--pack", action="store_true",
+                    help="trajectory-aware wave packing at admission: the "
+                         "deterministic scheduler walk replays identically "
+                         "on every host, so the pod artifact stays bitwise "
+                         "— only admission ticks move")
     ap.add_argument("--trace-out", default="",
                     help="per-host Chrome trace export: host i writes "
                          "<path>.host<i> with pid=i-tagged events, so "
@@ -120,7 +125,7 @@ def build_requests(n):
 
 def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
               mesh=None, trace_out="", clients=0, finish_mode="stream",
-              finish_async_depth=1):
+              finish_async_depth=1, pack=False):
     """Build the pod engine and serve the canonical workload; returns the
     ServeResult.  ``mesh=None`` runs hostless (the in-process reference).
     ``trace_out`` turns on obs tracing: each host exports its own
@@ -129,11 +134,13 @@ def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
     ``clients`` > 0 adds a deterministic stacked client model so the
     client segment runs too — streamed against in-flight server windows
     or drained afterwards per ``finish_mode``."""
-    from repro.serve import EngineConfig, ObsConfig, ServeEngine
+    from repro.serve import EngineConfig, FIFOScheduler, ObsConfig, \
+        ServeEngine
     sched, apply_fn, server, samplers = build_world()
     obs = ObsConfig(trace_path=trace_out) if trace_out else None
     cfg = EngineConfig(sched=sched, apply_fn=apply_fn, image_shape=SHAPE,
                        slots=slots, samplers=samplers, mesh=mesh,
+                       scheduler=FIFOScheduler(pack=pack) if pack else None,
                        ticks_per_dispatch=k, async_depth=depth,
                        hosts=num_processes,
                        host_id=process_id if num_processes > 1 else 0,
@@ -187,7 +194,8 @@ def main(argv=None):
                     args.requests, args.ticks_per_dispatch,
                     args.async_depth, mesh=mesh, trace_out=args.trace_out,
                     clients=args.clients, finish_mode=args.finish_mode,
-                    finish_async_depth=args.finish_async_depth)
+                    finish_async_depth=args.finish_async_depth,
+                    pack=args.pack)
     if args.clients:
         s = res.summary
         print(f"client finish ({s['finish_mode']}): "

@@ -46,6 +46,25 @@ def _parse_args(argv=None):
     ap.add_argument("--eta", type=float, default=0.0,
                     help="DDIM stochasticity in [0,1]; 1 on the dense "
                          "trajectory is the DDPM ancestral step")
+    ap.add_argument("--mix", action="store_true",
+                    help="heterogeneous traffic: requests cycle over the "
+                         "WHOLE sampler menu (dense ddpm + a strided ddim; "
+                         "+ the ad-hoc entry under --spare-columns) and "
+                         "--cut-ratios, instead of walking one --sampler. "
+                         "Pair with --pack for step-homogeneous waves")
+    ap.add_argument("--pack", action="store_true",
+                    help="trajectory-aware wave packing in the scheduler: "
+                         "same-(sampler, cut-class) candidates behind the "
+                         "head coalesce into each scan window's freed-slot "
+                         "budget (admission order changes, completions are "
+                         "bitwise unchanged)")
+    ap.add_argument("--spare-columns", type=int, default=0,
+                    help="preallocate N spare coefficient-table columns so "
+                         "ServeEngine.register_sampler can add ad-hoc "
+                         "trajectories at serve boundaries with ZERO "
+                         "recompiles; the launcher registers a 'dyn' ddim "
+                         "trajectory and (with --mix) routes requests "
+                         "through it to prove the cache held")
     ap.add_argument("--min-kid", type=float, default=None,
                     help="KID-gated admission floor: score each request's "
                          "disclosure on a calibration batch before it takes "
@@ -126,13 +145,24 @@ def main(argv=None):
         raise SystemExit("--num-steps strides the chain, which needs "
                          "--sampler ddim (ddpm is dense-only)")
     samplers = {"ddpm": make_sampler(args.T)}
-    if args.sampler == "ddim":
-        samplers["ddim"] = make_sampler(args.T, "ddim", args.num_steps,
-                                        args.eta)
+    if args.sampler == "ddim" or args.mix:
+        samplers["ddim"] = make_sampler(
+            args.T, "ddim", args.num_steps or max(2, args.T // 2),
+            args.eta)
+    dyn_sampler = None
+    if args.spare_columns:
+        k_dyn = min(args.spare_columns, max(2, args.T // 4))
+        dyn_sampler = make_sampler(args.T, "ddim", k_dyn, args.eta)
+    request_samplers = [args.sampler]
+    if args.mix:
+        request_samplers = list(samplers) + (["dyn"] if dyn_sampler
+                                             else [])
+    traffic = ("mix of " + "/".join(request_samplers) if args.mix
+               else samplers[args.sampler].describe())
     print(f"serve_diffusion: mesh=data:{d}xmodel:{m} slots={args.slots} "
           f"requests={args.requests} T={args.T} policy={args.policy} "
-          f"backend={args.step_backend} "
-          f"sampler={samplers[args.sampler].describe()} "
+          f"backend={args.step_backend} sampler={traffic} "
+          f"pack={args.pack} spare_columns={args.spare_columns} "
           f"min_kid={args.min_kid}")
 
     ucfg = dataclasses.replace(
@@ -160,7 +190,7 @@ def main(argv=None):
                     cut_ratio=args.cut_ratios[i % len(args.cut_ratios)],
                     client_idx=i % args.clients,
                     arrival_tick=i * args.arrival_every,
-                    sampler=args.sampler)
+                    sampler=request_samplers[i % len(request_samplers)])
             for i in range(args.requests)
         ]
 
@@ -187,16 +217,30 @@ def main(argv=None):
         cfg = EngineConfig(
             sched=sched, apply_fn=apply_fn,
             image_shape=(args.image, args.image, 1), slots=args.slots,
-            scheduler=make_scheduler(args.policy, args.T, samplers=samplers),
+            scheduler=make_scheduler(args.policy, args.T, samplers=samplers,
+                                     pack=args.pack),
             step_backend=args.step_backend, mesh=mesh, samplers=samplers,
-            admission=admission,
+            admission=admission, spare_columns=args.spare_columns,
             ticks_per_dispatch=args.ticks_per_dispatch,
             async_depth=args.async_depth, finish_mode=args.finish_mode,
             finish_async_depth=args.finish_async_depth, obs=obs)
         eng = ServeEngine(cfg, server_params)
+        if dyn_sampler is not None:
+            eng.register_sampler("dyn", dyn_sampler)
 
         eng.serve(list(requests), client_stack)            # compile + warmup
+        n_compiled = eng._tick._cache_size()
+        if dyn_sampler is not None:
+            # ad-hoc re-registration at the serve boundary: one device
+            # scatter into the spare columns, zero new scan compiles
+            eng.register_sampler("dyn", dyn_sampler)
         res = eng.serve(list(requests), client_stack)      # warm jit cache
+        if dyn_sampler is not None:
+            assert eng._tick._cache_size() == n_compiled, \
+                "dynamic sampler registration recompiled the scan program"
+            print(f"dynamic menu: {eng.registered_samplers()} "
+                  f"(dyn={dyn_sampler.describe()}, 0 new scan compiles)",
+                  flush=True)
         s = res.summary
         print(f"engine: {s['requests']} requests ({s['images']} images) in "
               f"{res.wall_s:.2f}s over {s['ticks']} ticks | "
@@ -208,6 +252,14 @@ def main(argv=None):
               f"{s['finish_s'] * 1e3:.1f}ms in {s['finish_batches']} "
               f"batch(es), overlap_frac {s['overlap_frac']:.2f} "
               f"(tail {s['finish_tail_s'] * 1e3:.1f}ms)", flush=True)
+        if "fragmentation_frac" in s:
+            occ = s.get("occupancy_by_class", {})
+            top = ", ".join(
+                f"{c}:{v}" for c, v in
+                sorted(occ.items(), key=lambda kv: -kv[1])[:4])
+            print(f"slot pool (pack={args.pack}): fragmentation_frac "
+                  f"{s['fragmentation_frac']:.4f} | occupancy by class "
+                  f"(lane-ticks): {top}", flush=True)
         if admission is not None:
             a = s["admission"]
             dk = a.get("disclosure_kid", {})

@@ -171,6 +171,35 @@ class AdmissionPolicy:
                 assert_same_menu(self.samplers, samplers,
                                  "admission policy", "engine")
 
+    def register_sampler(self, name: str, sampler: Sampler) -> None:
+        """Add (or replace) one menu entry at run time — the admission
+        half of ``ServeEngine.register_sampler``.  Any cached scores or
+        decisions keyed by ``name`` are invalidated IN PLACE (the score
+        cache is shared across :meth:`with_min_kid` clones, so stale
+        entries for a re-registered name would poison every floor), and
+        the next ``decide`` for the name re-scores against the new
+        trajectory."""
+        if self.samplers is None:
+            self.samplers = {}
+        self.samplers[name] = sampler
+        self._invalidate(name)
+
+    def unregister_sampler(self, name: str) -> None:
+        """Drop one menu entry (dynamic-menu eviction): requests naming
+        it are unknown again, and its cached scores/decisions go with
+        it."""
+        if self.samplers is not None:
+            self.samplers.pop(name, None)
+        self._invalidate(name)
+
+    def _invalidate(self, name: str) -> None:
+        # mutate, never rebind: _kid_cache is shared with with_min_kid
+        # clones by design (scores are floor-independent)
+        for ck in [ck for ck in self._kid_cache if ck[0] == name]:
+            del self._kid_cache[ck]
+        for ck in [ck for ck in self._decision_cache if ck[0] == name]:
+            del self._decision_cache[ck]
+
     def with_min_kid(self, min_kid: float) -> "AdmissionPolicy":
         """A policy at a different floor SHARING this one's score cache
         (disclosure KIDs are floor-independent; only decisions re-derive).

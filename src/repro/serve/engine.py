@@ -63,6 +63,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
@@ -164,6 +165,14 @@ class EngineConfig:
       depth, the exact analogue of ``async_depth``: 1 syncs each finish
       batch at the boundary that dispatched it, 2 keeps one batch in
       flight while the next server window computes.
+    * ``spare_columns`` preallocates extra columns in the engine's
+      concatenated coefficient table (plus matching spare menu rows) so
+      :meth:`ServeEngine.register_sampler` can write an AD-HOC
+      trajectory's (c_eps, ar, σ, keep) coefficients into them at run
+      time with one device scatter — no retrace of any jitted program
+      (the fused kernel already gathers per-lane columns; the menu
+      arrays are traced arguments with construction-fixed shapes).
+      0 (default) disables dynamic registration.
     """
 
     sched: DiffusionSchedule
@@ -183,6 +192,7 @@ class EngineConfig:
     host_id: Optional[int] = None
     finish_mode: str = "stream"
     finish_async_depth: int = 1
+    spare_columns: int = 0
     # observability: None (default, zero-cost off), an ObsConfig, or a
     # shared Observability instance (e.g. one bundle for engine + trainer)
     obs: Any = None
@@ -205,6 +215,10 @@ class EngineConfig:
             f"finish_mode={self.finish_mode!r} not in ('stream', 'drain')"
         assert 1 <= self.finish_async_depth <= 32, \
             f"finish_async_depth={self.finish_async_depth} outside [1, 32]"
+        assert 0 <= self.spare_columns <= 4096, \
+            f"spare_columns={self.spare_columns} outside [0, 4096] — " \
+            "spare coefficient columns are preallocated device memory " \
+            "(4 rows of float32 each plus a padded timestep row)"
         assert self.hosts >= 1, self.hosts
         assert self.slots % self.hosts == 0, \
             f"slots={self.slots} not divisible by hosts={self.hosts} — " \
@@ -509,29 +523,55 @@ class ServeEngine:
         self.scheduler.registry = self.obs.registry if self.obs else None
         # hoisted out of the tick: every registered trajectory's (4, K)
         # coefficient table concatenated column-wise (gathered per-lane in
-        # SMEM by the fused kernel), plus the per-trajectory column offset,
-        # length, and padded timestep rows the tick gathers model-t from
+        # SMEM by the fused kernel), plus the per-trajectory column offset
+        # and padded timestep rows the tick gathers model-t from.  The
+        # three live in ONE menu-state pytree (self._menu) threaded
+        # through every jitted program as a TRACED argument — never a
+        # closure constant — so register_sampler can swap in new arrays
+        # (same shapes: spare columns/rows are preallocated here) without
+        # a single retrace.
         self._traj_ids = {n: i for i, n in enumerate(self.samplers)}
         menu = list(self.samplers.values())
         lens = [s.K for s in menu]
         kmax = max(lens)
         self._kmax = kmax
-        self._tables = jnp.concatenate([s.tables(self.sched) for s in menu],
-                                       axis=1)
-        self._offsets = jnp.asarray(
-            np.cumsum([0] + lens[:-1]), jnp.int32)
-        self._ts_pad = jnp.asarray(
-            [list(s.trajectory.timesteps) + [1] * (kmax - s.K)
-             for s in menu], jnp.int32)
+        self.spare_columns = cfg.spare_columns
+        self._static_names = frozenset(self.samplers)
+        self._static_cols = sum(lens)
+        # a dynamic trajectory occupies >= 1 column, so spare_columns
+        # bounds the number of dynamic menu rows too
+        n_rows = len(menu) + cfg.spare_columns
+        tables = np.zeros((4, self._static_cols + cfg.spare_columns),
+                          np.float32)
+        tables[:, :self._static_cols] = np.concatenate(
+            [np.asarray(s.tables(self.sched)) for s in menu], axis=1)
+        # unwritten spare columns are the identity step (c_eps=0, ar=1,
+        # sigma=0, keep=0): a clamped junk gather from a retired/empty
+        # lane passes x through instead of dividing by sqrt(0)
+        tables[1, self._static_cols:] = 1.0
+        offsets = np.zeros(n_rows, np.int32)
+        offsets[:len(menu)] = np.cumsum([0] + lens[:-1])
+        ts_pad = np.ones((n_rows, kmax), np.int32)
+        for i, s in enumerate(menu):
+            ts_pad[i, :s.K] = list(s.trajectory.timesteps)
+        self._menu = {"tables": jnp.asarray(tables),
+                      "offsets": jnp.asarray(offsets),
+                      "ts_pad": jnp.asarray(ts_pad)}
+        # dynamic-menu bookkeeping (register_sampler): free column
+        # extents, free menu rows, and per-entry LRU stamps
+        self._dyn: Dict[str, Dict] = {}
+        self._dyn_rows = list(range(len(menu), n_rows))
+        self._dyn_free = [(self._static_cols, cfg.spare_columns)] \
+            if cfg.spare_columns else []
+        self._use_clock = itertools.count(1)
+        self._serving = False
         self._masked_index = functools.partial(
-            self.backend.masked_index_step, tables=self._tables,
-            clip=self.clip)
+            self.backend.masked_index_step, clip=self.clip)
         # the ONE lane tick both the k-scan window and the client finisher
         # run — see repro.diffusion.backend.make_lane_tick for the
         # done-latching contract the scan boundary relies on
         self._lane_tick = make_lane_tick(
-            self.apply_fn, self._masked_index, self._offsets, self._ts_pad,
-            kmax, self.image_shape)
+            self.apply_fn, self._masked_index, kmax, self.image_shape)
         # per-request key derivation, jitted per batch size: the eager
         # vmapped fold_in/split trace costs ~5ms per ADMISSION, which at
         # pod scale (hundreds of in-flight requests) would dwarf the
@@ -604,10 +644,10 @@ class ServeEngine:
         REPLICATED so every pod host reads it with a local np.asarray."""
         k = self.ticks_per_dispatch
 
-        def window(state, params):
+        def window(state, params, menu):
             def body(st, _):
                 x, pos, key, done = self._lane_tick(
-                    params, st["x"], st["pos"], st["key"], st["end"],
+                    params, menu, st["x"], st["pos"], st["key"], st["end"],
                     st["traj"], st["active"])
                 new = {"x": x, "pos": pos, "end": st["end"],
                        "traj": st["traj"], "key": key,
@@ -624,7 +664,7 @@ class ServeEngine:
         return window
 
     def _make_finish(self):
-        def finish(client_stack, x, pos, end, traj, keys, valid):
+        def finish(client_stack, menu, x, pos, end, traj, keys, valid):
             # lanes arrive GROUPED BY CLIENT: leading axis = client, second
             # = (padded) lanes of that client.  vmap pairs each client's
             # param row with its lane group positionally — each step is one
@@ -636,7 +676,7 @@ class ServeEngine:
                 def body(_, carry):
                     xc, p, key = carry
                     xc, p, key, _ = self._lane_tick(
-                        params, xc, p, key, eg, tg, vg)
+                        params, menu, xc, p, key, eg, tg, vg)
                     return (xc, p, key)
                 # traced bound -> one while-program shared by every cut mix
                 xo, _, _ = jax.lax.fori_loop(0, n_steps, body, (xg, pg, kg))
@@ -644,6 +684,117 @@ class ServeEngine:
             return jax.vmap(per_client)(client_stack, x, pos, end, traj,
                                         keys, valid)
         return finish
+
+    # ------------------------------------------------------------------
+    # dynamic sampler menus (EngineConfig.spare_columns)
+    # ------------------------------------------------------------------
+    def register_sampler(self, name: str, sampler: Sampler) -> int:
+        """Register an AD-HOC trajectory into the live engine — no
+        retrace.  The sampler's (4, K) coefficient block lands in
+        preallocated spare columns with ONE device scatter, its padded
+        timestep row and column offset fill a spare menu row, and every
+        jitted program (`_tick`, `_finish`, `_admit`) keeps its cache:
+        the menu is a traced argument whose shapes were fixed at
+        construction (zero new compiles is gated in ``benchmarks.run
+        --only hetero_packing``).
+
+        When the spare region is full, LRU UNREFERENCED dynamic entries
+        are evicted (freed extents merge with their neighbours, so the
+        region cannot fragment permanently); static menu entries are
+        never evicted.  The scheduler's SJF cost menu and the admission
+        policy's score/decision caches are updated in the same call, so
+        pricing and gating key on the new entry immediately.  Call
+        between :meth:`serve` calls (every call boundary is a window
+        boundary: no scan windows are in flight and the queue is
+        drained, so every dynamic entry is unreferenced).  Returns the
+        assigned trajectory id."""
+        assert not self._serving, \
+            "register_sampler must run at a window boundary — between " \
+            "serve() calls, not from inside one"
+        assert self.spare_columns > 0, \
+            "EngineConfig.spare_columns == 0: no spare table columns " \
+            "were preallocated for dynamic sampler registration"
+        assert name not in self._static_names, \
+            f"sampler {name!r} is a static menu entry — static " \
+            "trajectories are immutable for the engine's lifetime"
+        assert sampler.trajectory.T == self.sched.T, \
+            f"sampler {name!r} built for T={sampler.trajectory.T}, " \
+            f"engine schedule has T={self.sched.T}"
+        assert sampler.K <= self._kmax, \
+            f"dynamic sampler {name!r} has K={sampler.K} > kmax=" \
+            f"{self._kmax} — the padded timestep rows are preallocated " \
+            "at the static menu's longest trajectory"
+        if name in self._dyn:
+            self._evict(name)          # re-registration replaces in full
+        col = self._alloc_extent(sampler.K)
+        tid = self._dyn_rows.pop(0)
+        # ONE scatter writes the whole (4, K) coefficient block; the two
+        # int row updates are O(kmax) metadata riding the same boundary
+        tables = self._menu["tables"].at[
+            :, col:col + sampler.K].set(sampler.tables(self.sched))
+        offsets = self._menu["offsets"].at[tid].set(col)
+        row = jnp.asarray(list(sampler.trajectory.timesteps)
+                          + [1] * (self._kmax - sampler.K), jnp.int32)
+        ts_pad = self._menu["ts_pad"].at[tid].set(row)
+        self._menu = {"tables": tables, "offsets": offsets,
+                      "ts_pad": ts_pad}
+        self._dyn[name] = {"tid": tid, "col": col, "K": sampler.K,
+                           "stamp": next(self._use_clock)}
+        self.samplers[name] = sampler
+        self._traj_ids[name] = tid
+        sched_menu = getattr(self.scheduler, "samplers", None)
+        if sched_menu is not None and sched_menu is not self.samplers:
+            sched_menu[name] = sampler
+        if self.admission is not None:
+            self.admission.register_sampler(name, sampler)
+        return tid
+
+    def registered_samplers(self) -> Dict[str, int]:
+        """Live DYNAMIC menu entries: name -> trajectory id."""
+        return {n: e["tid"] for n, e in self._dyn.items()}
+
+    def _alloc_extent(self, K: int) -> int:
+        """First-fit a K-column extent in the spare region, evicting LRU
+        dynamic entries until one exists."""
+        assert K <= self.spare_columns, \
+            f"dynamic trajectory needs {K} columns; only " \
+            f"{self.spare_columns} spare columns were preallocated"
+        while True:
+            for i, (start, length) in enumerate(self._dyn_free):
+                if length >= K:
+                    if length == K:
+                        del self._dyn_free[i]
+                    else:
+                        self._dyn_free[i] = (start + K, length - K)
+                    return start
+            assert self._dyn, "spare-extent accounting lost columns"
+            lru = min(self._dyn, key=lambda n: self._dyn[n]["stamp"])
+            self._evict(lru)
+
+    def _evict(self, name: str) -> None:
+        """Drop one dynamic menu entry: return its extent (merged with
+        adjacent free extents) and its menu row, and scrub the name from
+        the shared sampler menu and the admission caches.  The stale
+        device coefficients need no write — no trajectory id points at
+        them until the extent is reallocated."""
+        e = self._dyn.pop(name)
+        self._dyn_rows.append(e["tid"])
+        self._dyn_free.append((e["col"], e["K"]))
+        self._dyn_free.sort()
+        merged = []
+        for start, length in self._dyn_free:
+            if merged and merged[-1][0] + merged[-1][1] == start:
+                merged[-1] = (merged[-1][0], merged[-1][1] + length)
+            else:
+                merged.append((start, length))
+        self._dyn_free = merged
+        del self.samplers[name]
+        del self._traj_ids[name]
+        sched_menu = getattr(self.scheduler, "samplers", None)
+        if sched_menu is not None and sched_menu is not self.samplers:
+            sched_menu.pop(name, None)
+        if self.admission is not None:
+            self.admission.unregister_sampler(name)
 
     # ------------------------------------------------------------------
     # host-side admission / retirement
@@ -696,6 +847,9 @@ class ServeEngine:
             "x_mid": np.zeros((req.batch,) + self.image_shape, np.float32),
             "owned": np.zeros((req.batch,), bool),
             "exact_tick": -1,            # max exact finish over its lanes
+            # trajectory class for the per-window occupancy mix: lanes
+            # sharing it retire at the same boundary when co-admitted
+            "cls": f"{req.sampler}@{self._effective_cut(req)}",
         }
         metrics.on_admit(req.req_id, now)
         if self.obs:
@@ -847,6 +1001,11 @@ class ServeEngine:
         assert len({r.req_id for r in requests}) == len(requests), \
             "duplicate req_ids: completions/inflight are keyed by req_id"
         k = self.ticks_per_dispatch
+        # LRU stamps for the dynamic menu: a serve that names an entry
+        # makes it most-recently-used for register_sampler's eviction
+        for r in requests:
+            if r.sampler in self._dyn:
+                self._dyn[r.sampler]["stamp"] = next(self._use_clock)
         obs = self.obs
         tracer = obs.tracer
         obs.timelines.reset()       # lifecycles are per serve() call
@@ -929,6 +1088,7 @@ class ServeEngine:
             finisher = _FinishPipeline(self, client_stack, metrics)
             unsubscribe = self.scheduler.on_retired(
                 lambda req, tick: finisher.stage(completions[req.req_id]))
+        self._serving = True
         t0 = time.perf_counter()
         now = 0
 
@@ -1030,6 +1190,20 @@ class ServeEngine:
                             f"ticks) with {len(self.scheduler)} queued / 0 "
                             "in-flight — scheduler starvation?")
                     continue
+                # ---- fragmentation + occupancy-by-class telemetry -------
+                # free lanes entering a window WHILE arrived demand waits
+                # are fragmentation: the scheduler could not shape the
+                # queue into them (ragged frees vs batch>1 heads).  The
+                # class mix is what wave packing homogenizes.
+                mix: Dict[str, int] = {}
+                for rec in inflight.values():
+                    if rec["remaining"]:
+                        mix[rec["cls"]] = mix.get(rec["cls"], 0) \
+                            + rec["remaining"]
+                starved = any(r.arrival_tick <= now
+                              for r in self.scheduler._queue)
+                metrics.on_window_mix(mix, self.slots - n_active, starved,
+                                      k)
                 # ---- ONE dispatch runs k fused ticks over every lane ----
                 if profile_left and not profile_on:
                     # NOT `import jax.profiler` — that would bind `jax` as
@@ -1038,7 +1212,8 @@ class ServeEngine:
                     _profiler.start_trace(obs.config.profile_dir)
                     profile_on = True
                 with tracer.span("dispatch", tick=now, lanes=n_active):
-                    state, done_seq = self._tick(state, self.server_params)
+                    state, done_seq = self._tick(state, self.server_params,
+                                                 self._menu)
                 # exact per-tick occupancy is recovered from this window's
                 # done stack at sync time (on_window_exact), so the
                 # dispatch only records the window-start count + the refs
@@ -1076,6 +1251,7 @@ class ServeEngine:
                         f"{int((lane_req >= 0).sum())} in-flight — "
                         "scheduler starvation?")
         finally:
+            self._serving = False
             # the hook closes over THIS call's completions dict — a stale
             # subscription would corrupt the scheduler's next serve()
             if unsubscribe is not None:
@@ -1188,7 +1364,8 @@ class ServeEngine:
         # own queue — the numpy lane operands follow it, with no
         # per-wave eager device_put chain; CPU→CPU placement does not
         # change numerics, so stream ≡ drain holds
-        x0_ref = self._finish(stack_used, x, pos, end, traj, keys, valid)
+        x0_ref = self._finish(stack_used, self._menu, x, pos, end, traj,
+                              keys, valid)
         return x0_ref, placement
 
     def _gather_stack(self, client_stack, present: tuple):

@@ -47,6 +47,12 @@ class ServeMetrics:
         self._lags: List[int] = []              # retire boundary - exact tick
         self._finish_batches = 0                # streamed client-finish calls
         self._finish_lanes = 0
+        # heterogeneous-traffic telemetry (on_window_mix): slot-ticks per
+        # trajectory class, and slot-ticks that sat EMPTY while arrived
+        # demand waited in the queue (fragmentation)
+        self._occ_by_class: Dict[str, int] = {}
+        self._frag_slot_ticks = 0
+        self._mix_ticks = 0
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -112,6 +118,29 @@ class ServeMetrics:
                               "fused scan windows dispatched").inc()
         self.registry.counter("serve_ticks_total",
                               "scan ticks executed").inc(ticks)
+
+    def on_window_mix(self, class_lanes: Dict[str, int], free: int,
+                      starved: bool, ticks: int) -> None:
+        """Per-window trajectory-class occupancy + fragmentation sample,
+        reported by the engine at each dispatch: ``class_lanes`` maps a
+        class label (``"<sampler>@<effective_cut>"``) to its live lanes
+        this window, ``free`` is the empty slots, and ``starved`` says
+        whether ARRIVED demand was left waiting in the queue.  Free slots
+        in a starved window are FRAGMENTATION — capacity the scheduler
+        could not shape the queue into (ragged frees vs batch>1 heads);
+        free slots with an empty queue are just low load and don't
+        count.  Aggregated into ``fragmentation_frac`` and
+        ``occupancy_by_class`` in :meth:`summary`."""
+        for cls, lanes in class_lanes.items():
+            self._occ_by_class[cls] = \
+                self._occ_by_class.get(cls, 0) + lanes * ticks
+        if starved and free > 0:
+            self._frag_slot_ticks += free * ticks
+        self._mix_ticks += ticks
+        self.registry.gauge(
+            "serve_fragmentation_free_lanes",
+            "empty slots entering a window while arrived demand waits"
+        ).set(free if starved else 0)
 
     def on_idle_gap(self, gap: int) -> None:
         """Ticks the engine SKIPPED because no lane was in flight (it
@@ -236,6 +265,13 @@ class ServeMetrics:
             "client_flops": client_f,
             "client_fraction": client_f / total,
         }
+        if self._mix_ticks:
+            # share of dispatched slot-ticks that sat empty while arrived
+            # demand waited — 0.0 is fragmentation-proof packing
+            out["fragmentation_frac"] = self._frag_slot_ticks / (
+                self.capacity * self._mix_ticks)
+            out["occupancy_by_class"] = dict(
+                sorted(self._occ_by_class.items()))
         if self._lags:
             lags = np.array(self._lags, np.float64)
             out["boundary_lag_mean"] = float(lags.mean())

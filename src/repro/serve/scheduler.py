@@ -27,9 +27,31 @@ Both policies accept a :class:`repro.serve.admission.AdmissionPolicy`
 without one): ``select`` then GATES every candidate before it can occupy
 a slot — a request the policy rejects (no position on its trajectory
 clears the disclosure-KID floor) is dropped from the queue, recorded for
-:meth:`take_rejections`, and never blocks the candidates behind it; a
-bumped request is costed by its EFFECTIVE (noisier, cheaper) cut, so SJF
-keeps ordering by what the server will actually execute.
+:meth:`take_rejections`, and never blocks the candidates behind it.
+:meth:`CutRatioScheduler.server_cost` prices a bumped request at its
+EFFECTIVE (noisier, cheaper) cut — that is what the server will actually
+execute and what slot/FLOP accounting needs — but the ORDERING score uses
+the NOMINAL trajectory cost: a privacy bump must never improve a
+request's queue position, or a stream of bumped-cheap requests starves
+honest low-cost ones (the SJF fairness inversion; regression-tested in
+tests/test_serve.py).
+
+Both policies also take ``pack=True`` — trajectory-aware WAVE PACKING for
+the serving engine's k-tick scan windows.  A packed ``select_window``
+still walks the policy's candidate order, but after admitting the head it
+sweeps the remaining candidates for same-CLASS requests (same sampler,
+same effective-cut cost — lanes that will retire at the same boundary)
+that fit the remaining budget, so each scan window runs step-homogeneous
+cohorts whose slots free in chunks instead of a ragged trickle.  Packing
+never skips the current head: when the head does not fit, NOTHING is
+admitted and freed slots accumulate for it — the same blocking rule that
+gives the unpacked policies their batch>1 liveness guarantee — and
+whenever any admission happens the head is among them, so every queued
+request's position in the order strictly decreases (FIFO) or is
+aging-bounded (SJF) exactly as before.  Packing changes WHEN a request is
+admitted, never its numerics: completions are bitwise invariant (lane
+numerics depend only on the request key chain), gated in ``benchmarks.run
+--only hetero_packing``.
 """
 from __future__ import annotations
 
@@ -66,13 +88,20 @@ class Request:
 
 
 class FIFOScheduler:
-    """Strict arrival order (head-of-line blocking)."""
+    """Strict arrival order (head-of-line blocking).
 
-    def __init__(self, admission=None):
+    ``pack=True`` enables trajectory-aware wave packing at
+    :meth:`select_window`: same-class candidates behind the head coalesce
+    into the window's freed-slot budget (see the module docstring for the
+    liveness argument).  FIFO's class is (sampler, cut_ratio) — requests
+    that will run the same number of server steps."""
+
+    def __init__(self, admission=None, pack: bool = False):
         self._queue: List[Request] = []
         self._seq = itertools.count()
         self._order = {}
         self.admission = admission          # Optional[AdmissionPolicy]
+        self.pack = bool(pack)
         self._rejections: List[Any] = []    # AdmissionDecisions from select
         self.aging_promotions = 0           # FIFO never reorders: stays 0
         self.registry = None                # obs: engine attaches its own
@@ -124,6 +153,15 @@ class FIFOScheduler:
         """Admission order — the only thing policies override."""
         return self.arrived(now)
 
+    def _class_of(self, req: Request):
+        """Wave-packing class: requests in one class retire at the same
+        scan-window boundary when admitted together.  For FIFO that is
+        (sampler, cut_ratio) — same trajectory, same number of server
+        steps.  :class:`CutRatioScheduler` refines this to the EFFECTIVE
+        cost so bumped requests pack with the cohort they actually run
+        with."""
+        return (req.sampler, req.cut_ratio)
+
     def select(self, free_slots: int, now: int) -> List[Request]:
         """One-tick admission — :meth:`select_window` with window=1."""
         return self.select_window(free_slots, now, 1)
@@ -150,24 +188,71 @@ class FIFOScheduler:
         before it can occupy a slot: rejected requests (disclosure KID
         below the floor at every trajectory position) are dropped from the
         queue and recorded for :meth:`take_rejections`; they neither block
-        nor age the candidates behind them."""
+        nor age the candidates behind them.
+
+        ``pack=True`` replaces the plain break-at-first-misfit walk with
+        the wave-packing pass (:meth:`_pack_waves`): same-class candidates
+        behind an admitted head coalesce into the budget, so each window
+        runs step-homogeneous cohorts.  The head-of-the-order blocking
+        rule is unchanged — packing reorders only among requests that
+        cannot block the head's accumulation of slots."""
         assert window >= 1, window
-        picked, dropped = [], []
+        served, dropped = [], []
         for r in self._candidates(now):
             if self.admission is not None:
                 d = self.admission.decide(r)
                 if not d.served:
                     dropped.append((r, d))
                     continue
-            if r.batch > free_slots:
+            served.append(r)
+        if self.pack:
+            picked = self._pack_waves(served, free_slots)
+        else:
+            picked = []
+            for r in served:
+                if r.batch > free_slots:
+                    break
+                picked.append(r)
+                free_slots -= r.batch
+        # one rebuild pass instead of per-request list.remove: O(queue)
+        # per boundary, not O(queue^2) — Request hashes by identity
+        # (eq=False), so membership is the same object test remove() did
+        gone = set(picked)
+        gone.update(r for r, _ in dropped)
+        if gone:
+            self._queue = [r for r in self._queue if r not in gone]
+        self._rejections.extend(d for _, d in dropped)
+        return picked
+
+    def _pack_waves(self, cands: List[Request],
+                    free_slots: int) -> List[Request]:
+        """Trajectory-aware packing over the gated candidate order.
+
+        Loop: take the first remaining candidate as the HEAD — if it does
+        not fit the remaining budget, stop (it blocks; slots keep
+        accumulating for it, the liveness rule) — otherwise admit it and
+        sweep the candidates behind it, admitting every same-class one
+        that fits and leaving the rest in order for the next head.  The
+        overall head of the order is therefore never skipped, and a
+        skipped request only waits on boundaries that admitted someone
+        ahead of it, so positions strictly shrink."""
+        remaining = list(cands)
+        picked: List[Request] = []
+        while remaining:
+            head = remaining[0]
+            if head.batch > free_slots:
                 break
-            picked.append(r)
-            free_slots -= r.batch
-        for r, d in dropped:
-            self._queue.remove(r)
-            self._rejections.append(d)
-        for r in picked:
-            self._queue.remove(r)
+            picked.append(head)
+            free_slots -= head.batch
+            cls = self._class_of(head)
+            rest: List[Request] = []
+            for r in remaining[1:]:
+                if self._class_of(r) == cls and r.batch <= free_slots:
+                    picked.append(r)
+                    free_slots -= r.batch
+                else:
+                    rest.append(r)
+            remaining = rest
         return picked
 
     def take_rejections(self) -> List[Any]:
@@ -189,11 +274,23 @@ class CutRatioScheduler(FIFOScheduler):
     construction when the scheduler arrives without one, so SJF and the
     engine can never disagree about a request's cost.  Unknown/absent
     sampler names fall back to the dense (1-c)·T estimate.
+
+    FAIRNESS: the ordering score uses the NOMINAL cost (what the request
+    asked for), not the effective one.  Under a KID gate a bumped request
+    executes fewer server steps (:meth:`server_cost` prices that for
+    accounting), but letting the discount improve its queue position
+    inverts fairness — a stream of expensive-nominal requests bumped
+    cheap would perpetually outrank an honest low-cost request that asked
+    for less (regression test in tests/test_serve.py).  Scoring
+    ``nominal_cost - aging · wait`` keeps the exact aging bound: nominal
+    costs are ≤ T, so after at most ``T / aging`` ticks of waiting a
+    request outranks any fresh arrival.
     """
 
     def __init__(self, T: int, aging: float = 1.0,
-                 samplers: Optional[Dict[str, Any]] = None, admission=None):
-        super().__init__(admission=admission)
+                 samplers: Optional[Dict[str, Any]] = None, admission=None,
+                 pack: bool = False):
+        super().__init__(admission=admission, pack=pack)
         assert aging > 0.0, "aging=0 reintroduces starvation"
         self.T = T
         self.aging = aging
@@ -203,12 +300,19 @@ class CutRatioScheduler(FIFOScheduler):
         """Server model calls this request still needs: its trajectory's
         step count above the cut (== (1-c)·T only for the dense chain).
         Under an admission policy this is the EFFECTIVE cut — a bumped
-        request is a cheaper job than its nominal cut-ratio suggests, and
-        SJF must order by what the server will actually execute."""
+        request is a cheaper job than its nominal cut-ratio suggests —
+        which is what slot/FLOP accounting and wave classes need.  The
+        ORDERING score uses :meth:`nominal_cost` instead (see the class
+        docstring's fairness note)."""
         if self.admission is not None:
             d = self.admission.decide(req)
             if d.served:
                 return float(d.effective_cut)
+        return self.nominal_cost(req)
+
+    def nominal_cost(self, req: Request) -> float:
+        """Trajectory step count above the NOMINAL cut — the price the
+        request asked for, independent of any admission bump."""
         if self.samplers and req.sampler in self.samplers:
             from repro.core.collafuse import CutPlan
             return float(CutPlan(self.T, req.cut_ratio).traj_server_steps(
@@ -216,8 +320,17 @@ class CutRatioScheduler(FIFOScheduler):
         return (1.0 - req.cut_ratio) * self.T
 
     def _score(self, req: Request, now: int) -> float:
+        # fairness-weighted: waiting offsets the NOMINAL cost, so a
+        # privacy bump never improves a request's queue position
         wait = max(0, now - req.arrival_tick)
-        return self.server_cost(req) - self.aging * wait
+        return self.nominal_cost(req) - self.aging * wait
+
+    def _class_of(self, req: Request):
+        """SJF wave class: (sampler, effective server cost).  Two requests
+        here occupy slots for the same number of ticks, so a packed
+        cohort's slots free at one boundary — bumped requests pack with
+        the cohort they actually execute with."""
+        return (req.sampler, self.server_cost(req))
 
     def _candidates(self, now: int) -> List[Request]:
         """Aged-score order: once a starved request ages to the top it
@@ -251,10 +364,10 @@ class CutRatioScheduler(FIFOScheduler):
 
 
 def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None,
-                   admission=None):
+                   admission=None, pack: bool = False):
     if policy == "fifo":
-        return FIFOScheduler(admission=admission)
+        return FIFOScheduler(admission=admission, pack=pack)
     if policy == "cut_ratio":
         return CutRatioScheduler(T, aging=aging, samplers=samplers,
-                                 admission=admission)
+                                 admission=admission, pack=pack)
     raise ValueError(f"unknown scheduling policy: {policy!r}")

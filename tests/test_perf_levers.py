@@ -1,10 +1,16 @@
 """§Perf levers (seq-sharded attention, flash-decoding cache layout) must be
 numerically identical to the baseline paths.  Runs in a subprocess with 8
-forced host devices so the main test process keeps seeing 1 device."""
+forced host devices so the main test process keeps seeing 1 device.
+
+Also home to host-side perf-lever regressions that need no devices at all:
+the scheduler's select_window must stay one rebuild pass over the queue
+(O(queue) per boundary), not the per-pick ``list.remove`` scan it shipped
+with (O(picked x queue))."""
 import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import pytest
 
@@ -55,6 +61,38 @@ SCRIPT = textwrap.dedent("""
         assert err < 2e-3, ("cache_seq_shard", err)
     print("LEVERS-OK")
 """)
+
+
+def _loaded_fifo(n):
+    """A depth-n FIFO queue built directly (bypassing add()'s per-insert
+    sort, which would dominate the timing and is not what this test
+    regresses)."""
+    from repro.serve import FIFOScheduler, Request
+    sch = FIFOScheduler()
+    sch._queue = [Request(req_id=i, key=None, arrival_tick=0)
+                  for i in range(n)]
+    sch._order = {i: i for i in range(n)}
+    return sch
+
+
+def test_select_window_scales_linearly_in_queue_depth():
+    """One select_window over a depth-n queue is O(n): a 4x deeper queue
+    must not cost anywhere near the 16x of the old per-pick
+    ``list.remove`` scan.  Wall-clock bounds are generous (CI noise) but
+    far below the quadratic path's cost at this depth."""
+    def one_call(n):
+        sch = _loaded_fifo(n)
+        t0 = time.perf_counter()
+        picked = sch.select_window(n, now=0, window=1)
+        dt = time.perf_counter() - t0
+        assert len(picked) == n and len(sch) == 0
+        return dt
+    one_call(1000)                                    # warmup
+    t_small = min(one_call(4000) for _ in range(3))
+    t_big = min(one_call(16000) for _ in range(3))
+    assert t_big < 0.5, f"select_window(16k queue) took {t_big:.3f}s"
+    assert t_big / max(t_small, 1e-6) < 10.0, \
+        f"super-linear queue scaling: {t_small:.4f}s -> {t_big:.4f}s"
 
 
 @pytest.mark.slow

@@ -287,3 +287,157 @@ def test_grad_clip_bounds_update(clip, scale):
     clipped = min(float(jnp.sqrt(jnp.sum(jnp.square(grads["w"])))), clip)
     assert float(m["grad_norm"]) == jnp.sqrt(jnp.sum(jnp.square(grads["w"])))
     del clipped
+
+# ---------------------------------------------------------------------------
+# Serving: wave packing + dynamic sampler menus
+# ---------------------------------------------------------------------------
+_SRV_T = 8
+_SRV_SIZE = 4
+_SRV_CUTS = (0.25, 0.5, 0.75)        # fixed small set: no shape changes,
+#                                      so the cached engines never retrace
+
+
+def _srv_apply(p, x, t):
+    b = x.shape[0]
+    freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
+    return (h @ p["w2"]).reshape(x.shape)
+
+
+def _srv_engines():
+    """One packed + one unpacked engine, built once and reused across
+    hypothesis examples (serve() drains fully per call, and the fixed
+    cut/sampler/batch menus keep every example on the compiled programs)."""
+    if not hasattr(_srv_engines, "cache"):
+        from repro.diffusion.sampler import make_sampler
+        from repro.serve import EngineConfig, FIFOScheduler, ServeEngine
+        d = _SRV_SIZE * _SRV_SIZE
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        params = {"w1": jax.random.normal(ks[0], (d + 8, 16)) / 4.0,
+                  "w2": jax.random.normal(ks[1], (16, d)) / 4.0}
+        sched = cosine_schedule(_SRV_T)
+
+        def build(pack):
+            samplers = {"ddpm": make_sampler(_SRV_T),
+                        "ddim": make_sampler(_SRV_T, "ddim", 4, eta=0.0)}
+            cfg = EngineConfig(sched=sched, apply_fn=_srv_apply,
+                               image_shape=(_SRV_SIZE, _SRV_SIZE, 1),
+                               slots=3, ticks_per_dispatch=2,
+                               samplers=samplers,
+                               scheduler=FIFOScheduler(pack=pack))
+            return ServeEngine(cfg, params)
+        _srv_engines.cache = (build(False), build(True))
+    return _srv_engines.cache
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_packing_never_changes_completions_property(data):
+    """Wave packing reorders admission, never numerics: for random
+    request mixes the packed engine completes the SAME request set with
+    bitwise-identical tensors."""
+    from repro.serve import Request
+    n = data.draw(st.integers(1, 6), label="n_requests")
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            req_id=i,
+            key=jax.random.PRNGKey(data.draw(st.integers(0, 2**16),
+                                             label=f"seed{i}")),
+            batch=data.draw(st.sampled_from([1, 2, 3]), label=f"batch{i}"),
+            cut_ratio=data.draw(st.sampled_from(_SRV_CUTS),
+                                label=f"cut{i}"),
+            sampler=data.draw(st.sampled_from(["ddpm", "ddim"]),
+                              label=f"sampler{i}"),
+            arrival_tick=data.draw(st.integers(0, 3), label=f"arr{i}")))
+    plain, packed = _srv_engines()
+    r_plain = plain.serve([Request(**vars(r)) for r in reqs])
+    r_packed = packed.serve([Request(**vars(r)) for r in reqs])
+    assert set(r_packed.completions) == set(r_plain.completions)
+    for rid, comp in r_plain.completions.items():
+        np.testing.assert_array_equal(r_packed.completions[rid].x_mid,
+                                      comp.x_mid, err_msg=f"req {rid}")
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_packed_scheduler_liveness_property(data):
+    """Liveness under pack=True for random arrival streams: with one lane
+    retiring per tick, every request — batch heads included — is admitted
+    within (queue drain time + aging bound + capacity) ticks."""
+    from repro.serve import Request, make_scheduler
+    policy = data.draw(st.sampled_from(["fifo", "cut_ratio"]),
+                       label="policy")
+    cap = 4
+    sch = make_scheduler(policy, _SRV_T, pack=True)
+    n = data.draw(st.integers(1, 12), label="n_requests")
+    reqs = [Request(req_id=i,
+                    key=None,
+                    batch=data.draw(st.sampled_from([1, 2, 4]),
+                                    label=f"batch{i}"),
+                    cut_ratio=data.draw(st.sampled_from(_SRV_CUTS),
+                                        label=f"cut{i}"),
+                    arrival_tick=data.draw(st.integers(0, 8),
+                                           label=f"arr{i}"))
+            for i in range(n)]
+    for r in reqs:
+        sch.add(r)
+    total = sum(r.batch for r in reqs)
+    bound = 8 + _SRV_T + 2 * total + cap + 4
+    occupied, admitted = 0, set()
+    for now in range(bound):
+        picked = sch.select(cap - occupied, now)
+        occupied += sum(r.batch for r in picked)
+        admitted.update(r.req_id for r in picked)
+        if len(admitted) == n:
+            break
+        occupied = max(0, occupied - 1)      # one lane retires per tick
+    assert len(admitted) == n, \
+        f"{policy}: {n - len(admitted)} requests starved past {bound} ticks"
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_spare_column_registration_roundtrip_property(data):
+    """Random register sequences against the spare region round-trip the
+    coefficients bitwise (menu slice == Sampler.tables), and the extent
+    accounting always partitions the region exactly — no lost or
+    double-booked columns, whatever the eviction history."""
+    from repro.diffusion.sampler import make_sampler
+    from repro.serve import EngineConfig, ServeEngine
+    if not hasattr(_srv_engines, "reg"):
+        d = _SRV_SIZE * _SRV_SIZE
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        params = {"w1": jax.random.normal(ks[0], (d + 8, 16)) / 4.0,
+                  "w2": jax.random.normal(ks[1], (16, d)) / 4.0}
+        sched = cosine_schedule(_SRV_T)
+        cfg = EngineConfig(sched=sched, apply_fn=_srv_apply,
+                           image_shape=(_SRV_SIZE, _SRV_SIZE, 1), slots=2,
+                           samplers={"ddpm": make_sampler(_SRV_T)},
+                           spare_columns=6)
+        _srv_engines.reg = ServeEngine(cfg, params)
+    eng = _srv_engines.reg
+    sched = eng.sched
+    for _ in range(data.draw(st.integers(1, 4), label="n_ops")):
+        name = data.draw(st.sampled_from(["a", "b", "c"]), label="name")
+        k = data.draw(st.integers(1, 6), label="K")
+        s = make_sampler(_SRV_T, "ddim", k, eta=0.0)
+        eng.register_sampler(name, s)
+        e = eng._dyn[name]
+        np.testing.assert_array_equal(
+            np.asarray(eng._menu["tables"][:, e["col"]:e["col"] + k]),
+            np.asarray(s.tables(sched)))
+        np.testing.assert_array_equal(
+            np.asarray(eng._menu["ts_pad"][e["tid"], :k]),
+            np.asarray(list(s.trajectory.timesteps)))
+        assert int(eng._menu["offsets"][e["tid"]]) == e["col"]
+        # extent accounting: used + free is an exact, disjoint partition
+        spans = sorted([(d2["col"], d2["K"]) for d2 in eng._dyn.values()]
+                       + list(eng._dyn_free))
+        assert sum(length for _, length in spans) == eng.spare_columns
+        pos = eng._static_cols
+        for start, length in spans:
+            assert start == pos, (spans, eng._dyn_free)
+            pos += length

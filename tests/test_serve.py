@@ -275,6 +275,239 @@ def test_cut_ratio_scheduler_no_starvation_for_large_batches():
     assert admitted_at is not None and admitted_at <= 110
 
 
+# ---------------------------------------------------------------------------
+# SJF fairness: ordering by NOMINAL cost (a bump never buys queue position)
+# ---------------------------------------------------------------------------
+class _BumpGate:
+    """Admission stub: serves everything, bumping the ``"bumpy"`` sampler
+    to a cheap effective cut — just enough ``decide`` interface for the
+    scheduler to reproduce the SJF fairness inversion without a
+    calibration stack."""
+
+    def __init__(self, T, bumped_cut=1):
+        self.T, self.bumped_cut = T, bumped_cut
+
+    def decide(self, req):
+        from repro.serve.admission import AdmissionDecision
+        nominal = int(round((1.0 - req.cut_ratio) * self.T))
+        bump = req.sampler == "bumpy"
+        return AdmissionDecision(
+            req_id=req.req_id, sampler=req.sampler, cut_ratio=req.cut_ratio,
+            nominal_cut=nominal,
+            effective_cut=self.bumped_cut if bump else nominal,
+            kid=0.0, min_kid=-1.0, action="bump" if bump else "admit")
+
+
+def test_sjf_orders_by_nominal_cost_not_bumped_effective():
+    """Regression for the SJF fairness inversion: a privacy bump makes a
+    request CHEAPER to execute (``server_cost`` prices the effective cut
+    for slot/FLOP accounting) but must not buy it a better queue position
+    — under the old effective-cost score a stream of expensive-nominal
+    bumped requests perpetually outranked an honest request that asked
+    for less."""
+    T_ = 100
+    sch = CutRatioScheduler(T_, aging=1.0, admission=_BumpGate(T_))
+    honest = Request(req_id=0, key=None, cut_ratio=0.95, arrival_tick=0)
+    bumped = Request(req_id=1, key=None, cut_ratio=0.0, arrival_tick=0,
+                     sampler="bumpy")
+    # accounting still prices the bump at its EFFECTIVE (cheap) cut ...
+    assert sch.server_cost(bumped) == 1.0 < sch.server_cost(honest)
+    # ... but the ordering score is the NOMINAL trajectory cost
+    assert sch.nominal_cost(bumped) == pytest.approx(100.0)
+    sch.add(bumped)
+    sch.add(honest)
+    assert [r.req_id for r in sch.select(1, now=0)] == [0]
+    # and the bumped request is not starved either: aging admits it once
+    # its wait offsets the nominal-cost gap (wait > 100 - 5 ticks)
+    admitted_at = None
+    for now in range(1, 2 * T_):
+        sch.add(Request(req_id=1000 + now, key=None, cut_ratio=0.95,
+                        arrival_tick=now))
+        if any(r.req_id == 1 for r in sch.select(1, now)):
+            admitted_at = now
+            break
+    assert admitted_at is not None and admitted_at <= T_ + 1
+
+
+# ---------------------------------------------------------------------------
+# wave packing (pack=True)
+# ---------------------------------------------------------------------------
+def test_fifo_pack_waves_backfill_same_class():
+    """pack=True: an admitted head's spare budget back-fills with
+    same-class candidates from BEHIND a blocked big request, without ever
+    skipping the overall head of the order."""
+    def load(sch):
+        sch.add(Request(req_id=0, key=None, batch=1, cut_ratio=0.5,
+                        arrival_tick=0))
+        sch.add(Request(req_id=1, key=None, batch=8, cut_ratio=0.25,
+                        arrival_tick=0))
+        sch.add(Request(req_id=2, key=None, batch=1, cut_ratio=0.5,
+                        arrival_tick=0))
+        sch.add(Request(req_id=3, key=None, batch=1, cut_ratio=0.25,
+                        arrival_tick=0))
+        return sch
+    plain = load(FIFOScheduler())
+    assert [r.req_id for r in plain.select(2, now=0)] == [0]  # 1 blocks 2,3
+    packed = load(FIFOScheduler(pack=True))
+    # 2 shares the head's (sampler, cut) class and rides its budget; 3 is
+    # a different class and stays queued behind the blocked batch-8
+    assert [r.req_id for r in packed.select(2, now=0)] == [0, 2]
+    # once the batch-8 request heads the order it blocks EVERYTHING until
+    # its slots accumulate — the unpacked liveness rule, unchanged
+    assert packed.select(4, now=0) == []
+    assert [r.req_id for r in packed.select(8, now=0)] == [1]
+    assert [r.req_id for r in packed.select(1, now=0)] == [3]
+
+
+def test_pack_preserves_large_batch_liveness():
+    """Aged batch-4 head under pack=True: back-filling must not let the
+    cheap stream starve it — nothing is admitted over its head, so the
+    unpacked aging bound carries over unchanged."""
+    sch = CutRatioScheduler(T=100, aging=1.0, pack=True)
+    sch.add(Request(req_id=0, key=None, batch=4, cut_ratio=0.0,
+                    arrival_tick=0))
+    free, admitted_at = 1, None
+    for now in range(400):
+        sch.add(Request(req_id=1000 + now, key=None, batch=1,
+                        cut_ratio=0.99, arrival_tick=now))
+        picked = sch.select(free, now)
+        if any(r.req_id == 0 for r in picked):
+            admitted_at = now
+            break
+        free = free - sum(r.batch for r in picked) + 1
+    assert admitted_at is not None and admitted_at <= 110
+
+
+def test_pack_engine_bitwise_equal_to_unpacked(models):
+    """Engine level: pack=True changes only WHEN requests are admitted —
+    the completion set and every completion tensor are bitwise the
+    unpacked run's (lane numerics depend only on the request key chain)."""
+    from repro.diffusion.sampler import make_sampler
+    sched, server, _ = models
+    samplers = {"ddpm": make_sampler(T),
+                "ddim": make_sampler(T, "ddim", 4, eta=0.0)}
+
+    def reqs():
+        return [Request(req_id=i, key=jax.random.PRNGKey(800 + i),
+                        batch=(1, 4, 1, 2)[i % 4],
+                        cut_ratio=(0.25, 0.5)[i % 2],
+                        sampler=("ddpm", "ddim")[(i // 2) % 2],
+                        arrival_tick=i // 3)
+                for i in range(10)]
+
+    runs = {}
+    for pack in (False, True):
+        eng = _engine(sched, server, slots=4, samplers=samplers,
+                      ticks_per_dispatch=3,
+                      scheduler=FIFOScheduler(pack=pack))
+        runs[pack] = eng.serve(reqs())
+    assert set(runs[True].completions) == set(runs[False].completions)
+    for rid, comp in runs[False].completions.items():
+        np.testing.assert_array_equal(runs[True].completions[rid].x_mid,
+                                      comp.x_mid, err_msg=f"req {rid}")
+
+
+# ---------------------------------------------------------------------------
+# dynamic sampler menus (EngineConfig.spare_columns)
+# ---------------------------------------------------------------------------
+def test_register_sampler_matches_static_menu_bitwise(models):
+    """A dynamically registered trajectory serves bit-identically to the
+    same sampler in a static menu, and registration adds ZERO compiles —
+    the menu is traced data, not a closure constant."""
+    from repro.diffusion.sampler import make_sampler
+    sched, server, _ = models
+    dyn = make_sampler(T, "ddim", 4, eta=0.0)
+
+    def reqs():
+        return [Request(req_id=0, key=jax.random.PRNGKey(123), batch=2,
+                        cut_ratio=0.5, sampler="dyn")]
+
+    static = _engine(sched, server,
+                     samplers={"ddpm": make_sampler(T), "dyn": dyn})
+    ref = static.serve(reqs())
+    eng = _engine(sched, server, samplers={"ddpm": make_sampler(T)},
+                  spare_columns=8)
+    eng.serve([Request(req_id=9, key=jax.random.PRNGKey(9),
+                       cut_ratio=0.5)])          # compile the tick program
+    n_compiled = eng._tick._cache_size()
+    tid = eng.register_sampler("dyn", dyn)
+    assert eng.registered_samplers() == {"dyn": tid}
+    res = eng.serve(reqs())
+    assert eng._tick._cache_size() == n_compiled  # no retrace
+    np.testing.assert_array_equal(res.completions[0].x_mid,
+                                  ref.completions[0].x_mid)
+
+
+def test_register_sampler_lru_eviction_and_extent_merge(models):
+    """When the spare region fills, the LEAST RECENTLY SERVED dynamic
+    entry is evicted (registration order is not recency — serving a
+    request bumps the stamp), and freed extents merge with their
+    neighbours so a full-width trajectory can land after evictions."""
+    from repro.diffusion.sampler import make_sampler
+    sched, server, _ = models
+    eng = _engine(sched, server, samplers={"ddpm": make_sampler(T)},
+                  spare_columns=8)
+    mk = lambda k: make_sampler(T, "ddim", k, eta=0.0)
+    eng.register_sampler("s1", mk(4))
+    eng.register_sampler("s2", mk(4))             # spare region now full
+    assert set(eng.registered_samplers()) == {"s1", "s2"}
+    # serving through s1 bumps its LRU stamp, so s2 — registered later
+    # but never used — is the eviction victim
+    eng.serve([Request(req_id=0, key=jax.random.PRNGKey(1), sampler="s1")])
+    eng.register_sampler("s3", mk(4))
+    assert set(eng.registered_samplers()) == {"s1", "s3"}
+    # a full-width registration evicts both and needs the two freed
+    # 4-column extents MERGED into one 8-column run
+    eng.register_sampler("wide", mk(8))
+    assert set(eng.registered_samplers()) == {"wide"}
+    res = eng.serve([Request(req_id=1, key=jax.random.PRNGKey(2),
+                             cut_ratio=0.5, sampler="wide")])
+    assert np.isfinite(res.completions[1].x_mid).all()
+
+
+def test_register_sampler_validation(models):
+    """Misuse fails loudly at the registration boundary: no spares, a
+    static name, a mismatched schedule, or a trajectory wider than the
+    spare region."""
+    from repro.diffusion.sampler import make_sampler
+    sched, server, _ = models
+    eng0 = _engine(sched, server, samplers={"ddpm": make_sampler(T)})
+    with pytest.raises(AssertionError, match="spare_columns"):
+        eng0.register_sampler("d", make_sampler(T, "ddim", 4, eta=0.0))
+    eng = _engine(sched, server, samplers={"ddpm": make_sampler(T)},
+                  spare_columns=4)
+    with pytest.raises(AssertionError, match="static"):
+        eng.register_sampler("ddpm", make_sampler(T))
+    with pytest.raises(AssertionError, match="T="):
+        eng.register_sampler("d", make_sampler(T + 1))
+    with pytest.raises(AssertionError, match="spare columns"):
+        eng.register_sampler("d", make_sampler(T, "ddim", 6, eta=0.0))
+    # re-registration under the same name replaces the entry in full
+    eng.register_sampler("d", mk4 := make_sampler(T, "ddim", 4, eta=0.0))
+    tid = eng.register_sampler("d", mk4)
+    assert eng.registered_samplers() == {"d": tid}
+
+
+def test_fragmentation_metrics_surface_in_summary(models):
+    """A serve with waiting demand behind a blocked batch head reports
+    fragmentation_frac and per-class occupancy in the summary."""
+    sched, server, _ = models
+    reqs = [Request(req_id=0, key=jax.random.PRNGKey(10), batch=1,
+                    cut_ratio=0.25),
+            Request(req_id=1, key=jax.random.PRNGKey(11), batch=4,
+                    cut_ratio=0.5),
+            Request(req_id=2, key=jax.random.PRNGKey(12), batch=1,
+                    cut_ratio=0.75)]
+    res = _engine(sched, server, slots=4).serve(reqs)
+    assert 0.0 <= res.summary["fragmentation_frac"] <= 1.0
+    # the batch-4 request cannot ride with the batch-1 head: some free
+    # slots enter windows while it waits -> nonzero fragmentation
+    assert res.summary["fragmentation_frac"] > 0.0
+    occ = res.summary["occupancy_by_class"]
+    assert occ and all(v > 0 for v in occ.values())
+    assert any(cls.startswith("ddpm@") for cls in occ)
+
+
 def test_engine_completes_all_requests_within_bound(models):
     """Engine-level liveness: an adversarial mix (staggered arrivals, mixed
     c) fully drains within the engine's own analytic tick bound — run()
