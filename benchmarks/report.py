@@ -246,6 +246,39 @@ def hetero_table(rec):
           f"(gate: 0)")
 
 
+def cfg_table(rec):
+    gs = rec.get("guidance_scales", {})
+    print(f"classifier-free guidance serving (doubled cond+uncond lane "
+          f"pairs, one dispatch) — {rec['n_mixed']} mixed requests on "
+          f"{rec['slots']} slots, T={rec['T']}, K={rec['K']}, "
+          f"{rec['num_classes']} classes, guided entries "
+          f"{', '.join(f'{k}(w={v:g})' for k, v in sorted(gs.items()))}"
+          f"{' (toy)' if rec.get('toy') else ''}\n")
+    print("| traffic | ticks | ticks/s |")
+    print("|---|---|---|")
+    print(f"| unguided | {rec['ticks_unguided']} "
+          f"| {rec['ticks_per_s_unguided']:.0f} |")
+    print(f"| guided | {rec['ticks_guided']} "
+          f"| {rec['ticks_per_s_guided']:.0f} |")
+    occ = rec.get("occupancy_by_class_mixed", {})
+    if occ:
+        total = sum(occ.values()) or 1
+        print("\nmixed occupancy by class (sampler@cut@w, lane-ticks):")
+        print("\n| class | lane-ticks | share |")
+        print("|---|---|---|")
+        for cls, lt in sorted(occ.items(), key=lambda kv: -kv[1]):
+            print(f"| {cls} | {lt} | {lt / total * 100:.1f}% |")
+    print(f"\ngates: w=0 guided bitwise == unguided — completions AND "
+          f"admission decisions "
+          f"({'held' if rec.get('w0_bitwise_equal') else 'FAILED'}); "
+          f"mixed traffic compiled {rec['mixed_new_compiles']} new scan "
+          f"programs (gate: 0); guided/unguided ticks/sec "
+          f"**{rec['throughput_ratio']:.2f}x** (gate: >=0.45, full run); "
+          f"{rec['guided_served']} served guided requests all cleared "
+          f"disclosure KID >= {rec['min_kid']:.5f} on the guided "
+          f"trajectory")
+
+
 def finisher_table(rec):
     perf = rec.get("perf", {})
     print(f"streaming client finisher (finish batches overlapped with "
@@ -291,6 +324,8 @@ _BENCH_SECTIONS = [
      pod_ticks_table),
     ("hetero", "§Heterogeneous-traffic packing (waves + dynamic menus)",
      hetero_table),
+    ("cfg", "§Classifier-free guidance serving (doubled lane pairs)",
+     cfg_table),
     ("obs", "§Observability overhead (repro.obs)", obs_table),
     ("finisher", "§Streaming client finisher (overlapped client segment)",
      finisher_table),
@@ -328,6 +363,12 @@ def _headline(name, rec):
                 f"{rec['fragmentation_frac_on']:.3f}, "
                 f"{rec['dynamic_menu_new_compiles']} menu compiles)",
                 ">=1.3x (full), bitwise, 0 compiles")
+    if name == "cfg":
+        return ("guided/unguided ticks/s",
+                f"{rec['throughput_ratio']:.2f}x "
+                f"({rec['guided_served']} guided served, "
+                f"{rec['mixed_new_compiles']} compiles)",
+                ">=0.45x (full), w=0 bitwise, KID floor")
     if name == "obs":
         return ("obs-on ticks/s overhead",
                 f"{rec['overhead_frac'] * 100:+.1f}%",

@@ -1058,6 +1058,240 @@ def bench_hetero_packing(args):
     return rec
 
 
+def bench_cfg_guidance(args):
+    """Classifier-free-guidance serving gate: guided requests ride the
+    SAME fused masked-step scan as unguided traffic, on doubled
+    cond+uncond lane pairs blended before the step.  Gates:
+
+    * w=0 anchor: rerouting a workload through guided w=0 menu twins
+      (doubled lanes, guided step, ε̂-combine) leaves completions AND
+      admission decisions (action, effective cut, KID) bitwise/exactly
+      unchanged — the guided machinery is a numerical no-op at w=0;
+    * one program: a mixed guided+unguided workload (256 requests at
+      full scale) adds ZERO new ``_tick`` scan compiles after warmup —
+      guidance lives in the traced coefficient table row and the pair/
+      cond slot state, never in a new executable;
+    * throughput: guided traffic sustains >= 0.45x the unguided
+      ticks/sec at equal in-flight (full run only; the ideal is 0.5x —
+      each image burns two lanes through one dispatch — and the margin
+      absorbs pairing overhead);
+    * privacy: every SERVED guided request's disclosure KID clears the
+      floor, scored on the GUIDED trajectory (cache keyed (sampler,
+      pos, w)), and two independently-built gates agree exactly.
+
+    Writes results/BENCH_cfg.json (rendered by ``benchmarks.report
+    --all``; uploaded by the CI bench-smoke job)."""
+    import numpy as np
+
+    from repro.core.collafuse import CutPlan
+    from repro.data.synthetic import ClientDataConfig, make_client_datasets
+    from repro.diffusion.sampler import make_sampler
+    from repro.diffusion.schedule import cosine_schedule
+    from repro.serve import (AdmissionPolicy, EngineConfig, Request,
+                             ServeEngine)
+
+    T, K = (12, 4) if args.toy else (50, 10)
+    slots = 8 if args.toy else 32
+    n_mix = 48 if args.toy else 256
+    n_anchor = 12 if args.toy else 24
+    n_thr = 16 if args.toy else 64
+    calib_n = 8 if args.toy else 16
+    size = 8
+    shape = (size, size, 1)
+    cuts = (0.25, 0.75)
+    NC, tdim, hidden = 4, 16, 64
+    d = size * size
+
+    # conditional twin of _tiny_mlp_eps_model: a label embedding row per
+    # class + a null row (index NC) added to the time embedding
+    def init_fn(key):
+        ks = jax.random.split(key, 4)
+        s = lambda k, sh, fan: jax.random.normal(k, sh) / np.sqrt(fan)
+        return {"w1": s(ks[0], (d + tdim, hidden), d + tdim),
+                "w2": s(ks[1], (hidden, hidden), hidden),
+                "w3": s(ks[2], (hidden, d), hidden),
+                "yemb": s(ks[3], (NC + 1, tdim), tdim)}
+
+    def apply_fn(p, x, t, y=None):
+        b = x.shape[0]
+        freqs = jnp.exp(jnp.linspace(0.0, 3.0, tdim // 2))
+        ang = t[:, None].astype(jnp.float32) * freqs[None]
+        temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        yc = (jnp.full((b,), NC, jnp.int32) if y is None
+              else jnp.clip(y, 0, NC))
+        temb = temb + p["yemb"][yc]
+        h = jnp.concatenate([x.reshape(b, -1), temb], -1)
+        h = jax.nn.silu(h @ p["w1"])
+        h = jax.nn.silu(h @ p["w2"])
+        return (h @ p["w3"]).reshape(x.shape)
+
+    sched = cosine_schedule(T)
+    server_params = init_fn(jax.random.PRNGKey(0))
+    samplers = {
+        "ddpm": make_sampler(T),
+        "ddim": make_sampler(T, "ddim", K, eta=0.0),
+        # w=0 twins walk the identical trajectories — the anchor pair
+        "ddpm_g0": make_sampler(T, guidance=0.0),
+        "ddim_g0": make_sampler(T, "ddim", K, eta=0.0, guidance=0.0),
+        # real guidance scales for the mixed + throughput phases
+        "ddpm_g": make_sampler(T, guidance=1.5),
+        "ddim_g": make_sampler(T, "ddim", K, eta=0.0, guidance=2.0),
+    }
+    calib_sets, _ = make_client_datasets(ClientDataConfig(
+        n_clients=1, per_client=calib_n, image_size=size, holdout=2))
+    calib = calib_sets[0]
+
+    def engine(admission):
+        cfg = EngineConfig(sched=sched, apply_fn=apply_fn,
+                           image_shape=shape, slots=slots,
+                           samplers=samplers, admission=admission,
+                           num_classes=NC)
+        return ServeEngine(cfg, server_params)
+
+    def reqs(names, n, salt, batch_of=lambda i: 1 + i % 2, cut=None):
+        return [Request(req_id=i,
+                        key=jax.random.fold_in(jax.random.PRNGKey(salt), i),
+                        batch=batch_of(i),
+                        cut_ratio=cut if cut else cuts[i % len(cuts)],
+                        sampler=names[i % len(names)], label=i % NC)
+                for i in range(n)]
+
+    # ---- derive the floor from the measured (guided) landscape --------
+    probe = AdmissionPolicy(sched, calib, min_kid=float("-inf"),
+                            samplers=samplers)
+    engine(probe)                        # binds uncond + cond server fns
+    combos = [(nm, c) for nm in samplers for c in cuts] \
+        + [("ddpm", 0.5), ("ddpm_g", 0.5)]
+    nominal_kids, prefix_maxes, profiles = [], [], {}
+    for nm in samplers:
+        prof = probe.profile(nm, max_pos=max(
+            CutPlan(T, c).cut_index(samplers[nm])
+            for n2, c in combos if n2 == nm))
+        profiles[nm] = [round(v, 6) for v in prof]
+    for nm, c in combos:
+        nom = CutPlan(T, c).cut_index(samplers[nm])
+        nominal_kids.append(profiles[nm][nom])
+        prefix_maxes.append(max(profiles[nm][:nom + 1]))
+    # the w=0 twins must land on the EXACT unguided landscape
+    assert profiles["ddpm_g0"] == profiles["ddpm"][:len(
+        profiles["ddpm_g0"])], "w=0 guided KID profile diverged from ddpm"
+    assert profiles["ddim_g0"] == profiles["ddim"][:len(
+        profiles["ddim_g0"])], "w=0 guided KID profile diverged from ddim"
+    lo, hi = min(nominal_kids), min(prefix_maxes)
+    min_kid = 0.5 * (lo + hi) if lo < hi else lo
+    print(f"# cfg_guidance: slots={slots} T={T} K={K} classes={NC} "
+          f"cuts={cuts} min_kid={min_kid:.5f} "
+          f"(landscape lo={lo:.5f} hi={hi:.5f})")
+
+    gate = probe.with_min_kid(min_kid)
+    eng = engine(gate)
+
+    # ---- w=0 anchor: guided twins are a bitwise no-op -----------------
+    plain_names, twin_names = ["ddpm", "ddim"], ["ddpm_g0", "ddim_g0"]
+    res_a = eng.serve(reqs(plain_names, n_anchor, salt=3))
+    res_b = eng.serve(reqs(twin_names, n_anchor, salt=3))
+    assert set(res_a.completions) == set(res_b.completions)
+    for rid, comp in res_a.completions.items():
+        np.testing.assert_array_equal(
+            res_b.completions[rid].x_mid, comp.x_mid,
+            err_msg=f"req {rid}: w=0 guided diverged from unguided")
+    for rid, da in res_a.decisions.items():
+        db = res_b.decisions[rid]
+        assert (da.action, da.effective_cut, da.kid) == \
+            (db.action, db.effective_cut, db.kid), \
+            f"req {rid}: w=0 admission decision diverged"
+    print(f"w=0 anchor: {len(res_a.completions)} completions + "
+          f"{len(res_a.decisions)} decisions bitwise equal", flush=True)
+
+    # ---- mixed traffic: ONE scan program, zero new compiles -----------
+    mix_names = ["ddpm", "ddpm_g", "ddim", "ddim_g"]
+    eng.serve(reqs(mix_names, n_mix, salt=5))          # warmup
+    n_compiled = eng._tick._cache_size()
+    res_m = eng.serve(reqs(mix_names, n_mix, salt=7))
+    new_compiles = eng._tick._cache_size() - n_compiled
+    assert new_compiles == 0, \
+        f"mixed guided traffic recompiled the scan ({new_compiles} new)"
+    print(f"mixed: {res_m.summary['requests']} requests "
+          f"({res_m.summary['images']} images) in "
+          f"{res_m.summary['ticks']} ticks, 0 new scan compiles",
+          flush=True)
+
+    # ---- privacy: guided disclosures clear the floor, deterministically
+    n_guided_served = 0
+    for rid, dec in res_m.decisions.items():
+        smp = samplers[dec.sampler]
+        if dec.served and smp.guided:
+            n_guided_served += 1
+            assert dec.kid >= min_kid, \
+                f"req {rid}: served guided KID {dec.kid} < {min_kid}"
+            assert gate.disclosure_kid(dec.sampler,
+                                       dec.effective_cut) >= min_kid
+    assert n_guided_served > 0, "no guided request was served"
+    gate2 = AdmissionPolicy(sched, calib, min_kid=min_kid,
+                            samplers=samplers)
+    res_m2 = engine(gate2).serve(reqs(mix_names, n_mix, salt=7))
+    assert res_m.decisions == res_m2.decisions, \
+        "guided admission decisions drifted across fresh gates"
+    print(f"privacy: {n_guided_served} served guided requests all "
+          f">= {min_kid:.5f}, fresh-gate decisions identical", flush=True)
+
+    # ---- throughput: guided vs unguided at equal in-flight ------------
+    # ungated engine: pure serving cost, and both traffics walk their
+    # NOMINAL cut so the FLOP relation is exact (the gated engine may
+    # bump guided and unguided requests to different effective cuts —
+    # their KID landscapes differ at w != 0)
+    eng_thr = engine(None)
+    one = lambda i: 1
+    eng_thr.serve(reqs(["ddpm"], n_thr, salt=9, batch_of=one,
+                       cut=0.5))                            # warmup
+    eng_thr.serve(reqs(["ddpm_g"], n_thr, salt=9, batch_of=one, cut=0.5))
+    res_u = eng_thr.serve(reqs(["ddpm"], n_thr, salt=11, batch_of=one,
+                               cut=0.5))
+    res_g = eng_thr.serve(reqs(["ddpm_g"], n_thr, salt=11, batch_of=one,
+                               cut=0.5))
+    ratio = (res_g.summary["ticks_per_s"] /
+             max(res_u.summary["ticks_per_s"], 1e-9))
+    print("traffic,ticks,wall_s,ticks_per_s,server_flops")
+    for label, res in (("unguided", res_u), ("guided", res_g)):
+        print(f"{label},{res.summary['ticks']},{res.wall_s:.3f},"
+              f"{res.summary['ticks_per_s']:.1f},"
+              f"{res.summary['server_flops']:.3g}")
+    print(f"guided/unguided ticks/sec: {ratio:.2f}x "
+          f"(gate: >= 0.45 on the full run)", flush=True)
+    assert res_g.summary["server_flops"] == \
+        2.0 * res_u.summary["server_flops"], "guided server FLOPs != 2x"
+
+    rec = {"scenario": "cfg_guidance", "toy": bool(args.toy),
+           "slots": slots, "T": T, "K": K, "num_classes": NC,
+           "cuts": list(cuts), "n_mixed": n_mix, "n_anchor": n_anchor,
+           "n_throughput": n_thr, "min_kid": min_kid,
+           "w0_bitwise_equal": True, "mixed_new_compiles": 0,
+           "guided_served": n_guided_served,
+           "ticks_unguided": res_u.summary["ticks"],
+           "ticks_guided": res_g.summary["ticks"],
+           "ticks_per_s_unguided": res_u.summary["ticks_per_s"],
+           "ticks_per_s_guided": res_g.summary["ticks_per_s"],
+           "throughput_ratio": ratio,
+           "guidance_scales": {nm: samplers[nm].w for nm in samplers
+                               if samplers[nm].guided},
+           "occupancy_by_class_mixed":
+               res_m.summary.get("occupancy_by_class", {}),
+           "equivalence": "w=0 guided == unguided bitwise (completions + "
+                          "admission decisions); mixed traffic one scan "
+                          "program; fresh-gate decisions identical"}
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_cfg.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {out}")
+    if not args.toy:
+        # issue gate: a guided lane pair costs one extra model lane, not
+        # a second dispatch — >= 0.45x the unguided tick rate
+        assert ratio >= 0.45, \
+            f"guided serving only {ratio:.2f}x unguided ticks/sec"
+    return rec
+
+
 def bench_obs_overhead(args):
     """Observability-cost gate: the ``repro.obs`` stack (tracing + metrics
     registry + per-request timelines) threaded through the k-tick
@@ -1540,6 +1774,7 @@ BENCHES = {
     "privacy_admission": bench_privacy_admission,
     "pod_ticks": bench_pod_ticks,
     "hetero_packing": bench_hetero_packing,
+    "cfg_guidance": bench_cfg_guidance,
     "obs_overhead": bench_obs_overhead,
     "finisher_overlap": bench_finisher_overlap,
     "kernels": bench_kernels,

@@ -368,6 +368,10 @@ class UNetConfig:
     norm_groups: int = 8
     dropout: float = 0.0
     dtype: str = "float32"
+    # classifier-free guidance: 0 = unconditional (classic); N > 0 adds an
+    # (N+1)-row class embedding to the time embedding, row N being the
+    # null label the uncond branch / label-dropout training uses
+    num_classes: int = 0
     source = "CollaFuse §4 (Ronneberger'15 U-Net + He'16 ResNet + Vaswani'17 attn)"
 
     def reduced(self) -> "UNetConfig":

@@ -104,39 +104,78 @@ def server_loss_fn(sched: DiffusionSchedule, plan: CutPlan,
     *noised* samples a client uploaded (protocol steps 3-4): the server never
     touches x_0.
     """
-    def loss(params, x_t, t, eps):
+    def loss(params, x_t, t, eps, y=None):
         # t-range enforcement happens client-side in make_server_batch
-        eps_hat = model_fn(params, x_t, t)
+        eps_hat = (model_fn(params, x_t, t) if y is None
+                   else model_fn(params, x_t, t, y))
         return jnp.mean(jnp.square(eps_hat - eps))
     return loss
 
 
 def client_loss_fn(sched: DiffusionSchedule, plan: CutPlan,
-                   model_fn: Callable):
-    """DDPM loss over the client's private range, computed from local x_0."""
+                   model_fn: Callable, num_classes: int = 0,
+                   label_drop: float = 0.0):
+    """DDPM loss over the client's private range, computed from local x_0.
+
+    With ``num_classes > 0`` the returned loss takes per-image labels ``y``
+    and trains classifier-free: labels are dropped to the null index
+    ``num_classes`` with probability ``label_drop`` (key-derived, so the
+    batched and looped engines draw the same mask).  ``y=None`` keeps the
+    original unconditional path bitwise intact — no extra key splits.
+    """
     lo, hi = plan.client_range
 
-    def loss(params, key, x0):
+    def loss(params, key, x0, y=None):
+        if y is None:
+            return ddpm.ddpm_loss(
+                sched, lambda x_t, t: model_fn(params, x_t, t), key, x0,
+                t_range=(lo, hi))[0]
+        k_drop, k_loss = jax.random.split(key)
+        yd = drop_labels(k_drop, y, num_classes, label_drop)
         return ddpm.ddpm_loss(
-            sched, lambda x_t, t: model_fn(params, x_t, t), key, x0,
+            sched, lambda x_t, t: model_fn(params, x_t, t, yd), k_loss, x0,
             t_range=(lo, hi))[0]
     return loss
 
 
-def make_server_batch(sched: DiffusionSchedule, plan: CutPlan, key, x0):
+def drop_labels(key, y, num_classes: int, label_drop: float):
+    """Classifier-free label dropout: replace each label with the null index
+    ``num_classes`` with probability ``label_drop``."""
+    if label_drop <= 0.0:
+        return y
+    drop = jax.random.bernoulli(key, label_drop, y.shape)
+    return jnp.where(drop, jnp.full_like(y, num_classes), y)
+
+
+def make_server_batch(sched: DiffusionSchedule, plan: CutPlan, key, x0,
+                      y=None, num_classes: int = 0,
+                      label_drop: float = 0.0):
     """Client-side protocol steps 2-3: sample t from the SERVER range, noise
-    locally, and emit only (x_t, t, eps) — never x_0."""
+    locally, and emit only (x_t, t, eps) — never x_0.
+
+    With labels ``y`` the upload also carries ``y`` with classifier-free
+    dropout already applied client-side (the server never sees which labels
+    were dropped vs. genuinely null).  ``y=None`` keeps the original
+    two-way key split — bitwise-identical unconditional uploads.
+    """
     lo, hi = plan.server_range
-    k_t, k_n = jax.random.split(key)
+    if y is None:
+        k_t, k_n = jax.random.split(key)
+    else:
+        k_t, k_n, k_y = jax.random.split(key, 3)
     b = x0.shape[0]
     t = jax.random.randint(k_t, (b,), lo, hi + 1)
     eps = jax.random.normal(k_n, x0.shape, x0.dtype)
     x_t = ddpm.q_sample(sched, x0, t, eps)
-    return {"x_t": x_t, "t": t, "eps": eps}
+    up = {"x_t": x_t, "t": t, "eps": eps}
+    if y is not None:
+        up["y"] = drop_labels(k_y, y, num_classes, label_drop)
+    return up
 
 
 def make_pooled_server_batch(sched: DiffusionSchedule, plan: CutPlan,
-                             keys, x0_stack):
+                             keys, x0_stack, y_stack=None,
+                             num_classes: int = 0, label_drop: float = 0.0):
     """Protocol steps 2-3 for ALL clients in one traced program.
 
     ``keys``: [n_clients, 2] stacked PRNG keys (one per client, same draw
@@ -145,9 +184,15 @@ def make_pooled_server_batch(sched: DiffusionSchedule, plan: CutPlan,
     flattens to the pooled server batch [n_clients*b, ...] — ordered client-
     major, i.e. exactly ``concatenate([make_server_batch(k_i, x0_i)])``, so
     the fused server step reproduces the looped pooling bit-for-bit.
+    ``y_stack``: optional [n_clients, b] int labels, dropped client-side.
     """
-    up = jax.vmap(lambda k, x0: make_server_batch(sched, plan, k, x0))(
-        keys, x0_stack)
+    if y_stack is None:
+        up = jax.vmap(lambda k, x0: make_server_batch(sched, plan, k, x0))(
+            keys, x0_stack)
+    else:
+        up = jax.vmap(lambda k, x0, y: make_server_batch(
+            sched, plan, k, x0, y, num_classes, label_drop))(
+            keys, x0_stack, y_stack)
     n, b = x0_stack.shape[:2]
     return jax.tree.map(lambda a: a.reshape((n * b,) + a.shape[2:]), up)
 
@@ -275,14 +320,22 @@ def disclosed_at_split(sched: DiffusionSchedule, plan: CutPlan,
 
 def disclosed_at_pos(sched: DiffusionSchedule, sampler: Sampler,
                      server_fn: Callable, key, x0_client, pos: int,
-                     backend: BackendLike = None):
+                     backend: BackendLike = None, cond_fn=None,
+                     label: int = 0):
     """:func:`disclosed_at_split` generalised to an ARBITRARY trajectory
     position: noise the client's x_0 to x_T, denoise positions [0, pos)
     on the server.  Same key discipline as :func:`disclosed_at_split`, so
     ``pos == plan.cut_index(sampler)`` reproduces it exactly (asserted in
     tests/test_admission.py).  The KID-gated admission policy scores
     CANDIDATE cut positions with this — the nominal cut plus each
-    next-noisier bump target (``repro.serve.admission``)."""
+    next-noisier bump target (``repro.serve.admission``).
+
+    On a GUIDED sampler the server prefix runs under classifier-free
+    guidance (``cond_fn(x, t, y)`` supplies the conditional branch, the
+    plain ``server_fn`` the unconditional one) — guidance sharpens the
+    disclosed x, so admission must score the trajectory a guided request
+    actually walks.  At w=0 the combine is compiled out and the result is
+    bitwise the unguided disclosure."""
     assert 0 <= pos <= sampler.K, (pos, sampler.K)
     k_n, k_s = jax.random.split(key)
     b = x0_client.shape[0]
@@ -290,19 +343,26 @@ def disclosed_at_pos(sched: DiffusionSchedule, sampler: Sampler,
     eps = jax.random.normal(k_n, x0_client.shape, x0_client.dtype)
     x_T = ddpm.q_sample(sched, x0_client, t_top, eps)
     return sample_trajectory(sched, sampler, server_fn, k_s, x_T, 0, pos,
-                             backend=backend)
+                             backend=backend, cond_fn=cond_fn, label=label)
 
 
 # ---------------------------------------------------------------------------
 # Compute split accounting (paper H2c — GPU energy proxy)
 # ---------------------------------------------------------------------------
 def flops_split_steps(n_server_steps: int, n_client_steps: int,
-                      flops_per_model_call: float, batch: int) -> dict:
+                      flops_per_model_call: float, batch: int,
+                      guided: bool = False) -> dict:
     """FLOP split from raw per-side step counts — the shared core of
     :func:`flops_split` and the trajectory-aware serving accounting (a
     strided sampler pays ``CutPlan.traj_*_steps`` model calls, not the
-    dense (1-c)·T / c·T)."""
+    dense (1-c)·T / c·T).  ``guided`` doubles the SERVER segment exactly:
+    a classifier-free-guided request evaluates the model on a cond+uncond
+    lane pair per server step (one doubled-lane dispatch, but 2x the model
+    FLOPs); the client segment finishes unguided on the private model, so
+    its cost is unchanged."""
     server = n_server_steps * flops_per_model_call * batch
+    if guided:
+        server *= 2
     client = n_client_steps * flops_per_model_call * batch
     diffusion_pass = 10.0 * batch  # q_sample: a handful of elementwise ops
     return {

@@ -29,11 +29,13 @@ Two step contracts per backend:
 * timestep-indexed (``step`` / ``masked_step``): the dense DDPM chain,
   per-sample t in {1..T} — the original seam.
 * trajectory-indexed (``index_step`` / ``masked_index_step``): per-sample
-  COLUMNS into a canonical (4, C) coefficient table (c_eps, ar, sigma,
-  keep) built by ``repro.diffusion.sampler`` — one column per trajectory
-  position, so strided DDIM and dense DDPM ticks are the same program.
-  The dense ancestral table makes ``index_step`` bitwise ``step`` on the
-  jnp backend.
+  COLUMNS into a canonical (5, C) coefficient table (c_eps, ar, sigma,
+  keep, guidance w) built by ``repro.diffusion.sampler`` — one column per
+  trajectory position, so strided DDIM and dense DDPM ticks are the same
+  program.  ``guided_masked_index_step`` puts the classifier-free
+  ε̂-combine over cond+uncond lane pairs in front of the same fused step,
+  so guided traffic is STILL that one program.  The dense ancestral table
+  makes ``index_step`` bitwise ``step`` on the jnp backend.
 
 The Pallas backends honour ``REPRO_PALLAS_INTERPRET`` (see ``kernels/ops``):
 interpret mode on CPU, compiled Mosaic on TPU.
@@ -44,6 +46,14 @@ from typing import Callable, Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
+
+# Row index of the guidance-scale row in the canonical coefficient table
+# (rows 0-3 = c_eps, ar, sigma, keep drive the update; row 4 = the
+# classifier-free guidance scale w of the column's sampler).  Defined here
+# — the root of the diffusion import graph — and re-exported by
+# ``repro.diffusion.sampler``, which builds the tables.
+GUIDANCE_ROW = 4
+N_TABLE_ROWS = 5
 
 
 class StepBackend:
@@ -101,27 +111,66 @@ class StepBackend:
         m = active.reshape(active.shape + (1,) * (x.ndim - active.ndim))
         return jnp.where(m, x_new, x)
 
+    def guided_masked_index_step(self, x, cols, eps_hat, noise, active,
+                                 pair, cond, tables, *, clip: float = 3.0):
+        """Masked trajectory tick with the classifier-free-guidance
+        ε̂-combine in front of it.
+
+        Guided requests occupy a LANE PAIR: a primary lane (``cond`` True,
+        model saw the request label) and a shadow lane (``cond`` False,
+        model saw the null label); ``pair`` holds each lane's partner
+        index (its own index for unguided lanes).  Per lane the combine is
+        ``ε̂ = ε̂_u + w·(ε̂_c − ε̂_u)`` with w gathered from the table's
+        :data:`GUIDANCE_ROW` by the lane's column, and the shadow lane
+        borrows the primary's noise draw — both members of a pair step to
+        bit-identical x, so retire/ownership logic can read either.
+
+        The combine happens BEFORE :meth:`masked_index_step`, so mixed
+        guided/unguided traffic still bottoms out in ONE fused step
+        program.  Unpaired lanes (``pair == lane``) and w == 0 columns
+        take their raw / unconditional ε̂ through a select, making the
+        w=0 guided path and every unguided lane bitwise identical to the
+        plain :meth:`masked_index_step` tick.
+        """
+        if tables.shape[0] <= GUIDANCE_ROW:      # bare 4-row table: no
+            return self.masked_index_step(       # guidance data to gather
+                x, cols, eps_hat, noise, active, tables, clip=clip)
+        nb = (1,) * (x.ndim - 1)
+        cols_safe = jnp.clip(cols, 0, tables.shape[1] - 1)
+        w = tables[GUIDANCE_ROW, cols_safe].reshape((-1,) + nb)
+        c = cond.reshape((-1,) + nb)
+        eps_p = eps_hat[pair]
+        eps_c = jnp.where(c, eps_hat, eps_p)
+        eps_u = jnp.where(c, eps_p, eps_hat)
+        solo = (pair == jnp.arange(x.shape[0])).reshape((-1,) + nb)
+        eps = jnp.where(solo | (w == 0.0), eps_u,
+                        eps_u + w * (eps_c - eps_u))
+        z = jnp.where(c, noise, noise[pair])
+        return self.masked_index_step(x, cols, eps, z, active, tables,
+                                      clip=clip)
+
 
 def make_lane_tick(apply_fn: Callable, masked_index: Callable, kmax: int,
-                   image_shape) -> Callable:
+                   image_shape, conditional: bool = False) -> Callable:
     """Build the SCAN-COMPATIBLE masked lane tick every hot loop shares.
 
     One tick of a slot array walking heterogeneous trajectories:
 
         x, pos, key, done = lane_tick(params, menu, x, pos, key, end,
-                                      traj, gate)
+                                      traj, gate, y, pair, cond)
 
     ``menu`` is the trajectory-menu state, a dict of ARRAYS traced at call
-    time (not closed over as constants): ``tables`` — the (4, C)
-    concatenated coefficient table gathered per-lane by column —
-    ``offsets`` — each trajectory's first column — and ``ts_pad`` — the
-    (n_menu, kmax) padded timestep rows the model conditions on.  Passing
-    the menu as data is what makes DYNAMIC sampler registration
-    retrace-free: the serving engine preallocates spare columns/rows
-    (``EngineConfig.spare_columns``), writes an ad-hoc trajectory's
-    coefficients into them with one device scatter, and every jitted
-    program built on this tick keeps its cache (shapes never change —
-    asserted via jit cache sizes in ``benchmarks.run --only
+    time (not closed over as constants): ``tables`` — the (5, C)
+    concatenated coefficient table gathered per-lane by column (rows 0-3
+    the step coefficients, row ``GUIDANCE_ROW`` the column's guidance
+    scale) — ``offsets`` — each trajectory's first column — and
+    ``ts_pad`` — the (n_menu, kmax) padded timestep rows the model
+    conditions on.  Passing the menu as data is what makes DYNAMIC
+    sampler registration retrace-free: the serving engine preallocates
+    spare columns/rows (``EngineConfig.spare_columns``), writes an ad-hoc
+    trajectory's coefficients into them with one device scatter, and
+    every jitted program built on this tick keeps its cache (shapes never
+    change — asserted via jit cache sizes in ``benchmarks.run --only
     hetero_packing``).
 
     ``gate`` is the caller's liveness mask (engine: the slot's ``active``
@@ -133,24 +182,38 @@ def make_lane_tick(apply_fn: Callable, masked_index: Callable, kmax: int,
     per dispatch and retiring at the scan boundary reads the same ``x`` the
     lane had at its cut — bit-for-bit, at any k.
 
+    ``y``/``pair``/``cond`` are the conditional-serving lane state: the
+    per-lane class label fed to a ``conditional`` model (the null label
+    for unguided and shadow lanes), the partner-lane index of a guided
+    cond+uncond pair (own index when unguided), and the primary-lane
+    flag.  One model dispatch covers both members of every pair — the
+    ε̂-combine and the shadow lane's noise borrow happen in
+    ``masked_index`` (the StepBackend's ``guided_masked_index_step``
+    partial, minus ``tables``) so the step itself stays one fused
+    program.  With every lane unpaired the tick is bitwise the old
+    unguided tick.
+
     The function is pure in (carry, params, menu), so it traces once
     whether the caller wraps it in ``lax.scan`` (the engine's k-tick
     window), ``lax.fori_loop`` (the client finisher) or calls it
-    directly.  ``masked_index`` is the StepBackend's ``masked_index_step``
-    partial (minus ``tables``, supplied per call from the menu) — backend
-    choice stays a construction-time decision.
+    directly.  ``conditional`` engines call ``apply_fn(params, x, t, y)``;
+    unconditional ones keep the classic 3-arg convention.
     """
-    def lane_tick(params, menu, x, pos, key, end, traj, gate):
+    def lane_tick(params, menu, x, pos, key, end, traj, gate, y, pair,
+                  cond):
         stepping = gate & (pos < end)
         pos_c = jnp.clip(pos, 0, kmax - 1)
         t_lane = menu["ts_pad"][traj, pos_c]  # model conditions on t
-        eps_hat = apply_fn(params, x, t_lane)
+        if conditional:
+            eps_hat = apply_fn(params, x, t_lane, y)
+        else:
+            eps_hat = apply_fn(params, x, t_lane)
         ks = jax.vmap(jax.random.split)(key)
         k_next, k_n = ks[:, 0], ks[:, 1]
         noise = jax.vmap(
             lambda k: jax.random.normal(k, image_shape, jnp.float32))(k_n)
         cols = menu["offsets"][traj] + pos_c
-        x = masked_index(x, cols, eps_hat, noise, stepping,
+        x = masked_index(x, cols, eps_hat, noise, stepping, pair, cond,
                          tables=menu["tables"])
         pos = jnp.where(stepping, pos + 1, pos)
         key = jnp.where(stepping[:, None], k_next, key)

@@ -44,11 +44,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.diffusion.backend import BackendLike, get_backend
+from repro.diffusion.backend import (GUIDANCE_ROW, N_TABLE_ROWS, BackendLike,
+                                     get_backend)
 from repro.diffusion.schedule import (DiffusionSchedule, ancestral_pair_coefs,
                                       ddim_pair_coefs)
 
 FAMILIES = ("ddpm", "ddim")
+
+# GUIDANCE_ROW / N_TABLE_ROWS are re-exported here: rows 0-3 (c_eps, ar,
+# sigma, keep) drive the update itself; row GUIDANCE_ROW carries the
+# classifier-free guidance scale w of the column's sampler so guided
+# trajectories are just more table columns — the lane tick gathers w per
+# lane exactly like the step coefficients, and registering a guided
+# sampler reuses the spare-column allocator with zero scan recompiles.
+assert GUIDANCE_ROW == N_TABLE_ROWS - 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,15 +145,25 @@ class Sampler:
     the dense trajectory is routed through the ancestral coefficients (the
     two are a closed-form identity; sharing the code path makes the
     equivalence bitwise).
+
+    ``guidance_scale`` makes the sampler a classifier-free-guidance
+    family member: every step combines a conditional and an unconditional
+    ε̂ as ``ε̂ = ε̂_u + w·(ε̂_c − ε̂_u)``.  ``None`` (default) is the plain
+    unguided sampler; ``0.0`` is a GUIDED sampler whose combine reduces to
+    ε̂_u — the doubled-lane machinery runs but the trajectory is bitwise
+    the unguided one (the correctness anchor every gate pins).
     """
 
     trajectory: Trajectory
     family: str = "ddpm"
     eta: float = 1.0
+    guidance_scale: Optional[float] = None
 
     def __post_init__(self):
         assert self.family in FAMILIES, self.family
         assert 0.0 <= self.eta <= 1.0, self.eta
+        assert self.guidance_scale is None or self.guidance_scale >= 0.0, \
+            self.guidance_scale
         if self.family == "ddpm":
             assert self.trajectory.is_dense, \
                 "the DDPM ancestral update is only defined on the dense " \
@@ -154,29 +173,50 @@ class Sampler:
     def K(self) -> int:
         return self.trajectory.K
 
+    @property
+    def guided(self) -> bool:
+        """True when this sampler walks a cond+uncond lane pair."""
+        return self.guidance_scale is not None
+
+    @property
+    def w(self) -> float:
+        """The guidance scale as a plain float (0.0 when unguided)."""
+        return float(self.guidance_scale or 0.0)
+
     def tables(self, sched: DiffusionSchedule) -> jnp.ndarray:
-        """(4, K) canonical coefficient table (c_eps, ar, sigma, keep);
-        column j holds the step executed at trajectory position j."""
+        """(5, K) canonical coefficient table (c_eps, ar, sigma, keep, w);
+        column j holds the step executed at trajectory position j.  Row
+        :data:`GUIDANCE_ROW` is the guidance scale (0 for unguided
+        samplers) — backends gather it per lane for the ε̂-combine; the
+        step update itself only consumes rows 0-3."""
         assert sched.T == self.trajectory.T, (sched.T, self.trajectory.T)
         t = jnp.asarray(self.trajectory.timesteps, jnp.int32)
         ancestral = self.family == "ddpm" or (self.eta == 1.0 and
                                               self.trajectory.is_dense)
         if ancestral:
-            return ancestral_pair_coefs(sched, t)
-        tp = jnp.asarray(self.trajectory.t_prev(), jnp.int32)
-        return ddim_pair_coefs(sched, t, tp, self.eta)
+            coefs = ancestral_pair_coefs(sched, t)
+        else:
+            tp = jnp.asarray(self.trajectory.t_prev(), jnp.int32)
+            coefs = ddim_pair_coefs(sched, t, tp, self.eta)
+        wrow = jnp.full((1, self.K), self.w, coefs.dtype)
+        return jnp.concatenate([coefs, wrow], axis=0)
 
     def describe(self) -> str:
         fam = (self.family if self.family == "ddpm"
                else f"ddim(eta={self.eta:g})")
+        if self.guided:
+            fam += f" cfg(w={self.w:g})"
         return f"{fam} over {self.trajectory.describe()}"
 
 
 def make_sampler(T: int, family: str = "ddpm", num_steps: int = 0,
-                 eta: float = 1.0) -> Sampler:
+                 eta: float = 1.0,
+                 guidance: Optional[float] = None) -> Sampler:
     """Build a sampler from launcher-flag-shaped inputs.  ``num_steps`` of
     0 (or T) selects the dense trajectory; ddpm defaults eta to 1 (it IS
-    the eta=1 member of the family)."""
+    the eta=1 member of the family).  ``guidance=w`` makes the sampler a
+    classifier-free-guidance member (``w=0.0`` is the guided-but-neutral
+    anchor, bitwise the unguided chain; ``None`` is plain unguided)."""
     k = num_steps if num_steps else T
     if family == "ddpm" and k < T:
         raise ValueError(
@@ -185,8 +225,8 @@ def make_sampler(T: int, family: str = "ddpm", num_steps: int = 0,
             f"(--sampler ddim on the launchers)")
     traj = dense_trajectory(T) if k >= T else strided_trajectory(T, k)
     if family == "ddpm":
-        return Sampler(traj, "ddpm", 1.0)
-    return Sampler(traj, family, eta)
+        return Sampler(traj, "ddpm", 1.0, guidance)
+    return Sampler(traj, family, eta, guidance)
 
 
 DEFAULT = "ddpm"                 # registry key engines use for Request.sampler
@@ -223,7 +263,8 @@ def assert_same_menu(a, b, a_name: str = "menu A", b_name: str = "menu B"):
 def sample_trajectory(sched: DiffusionSchedule, sampler: Sampler,
                       model_fn, key, x_start, pos_from: int = 0,
                       pos_to: Optional[int] = None,
-                      backend: BackendLike = None, clip: float = 3.0):
+                      backend: BackendLike = None, clip: float = 3.0,
+                      cond_fn=None, label: int = 0):
     """Run trajectory positions [pos_from, pos_to) on ``x_start``.
 
     Full generation: pos_from=0, pos_to=K (x_T -> x_0).
@@ -235,6 +276,12 @@ def sample_trajectory(sched: DiffusionSchedule, sampler: Sampler,
     dense DDPM sampler this function reproduces ``sample_range`` —
     bit-for-bit on the jnp backend, to kernel rounding on the Pallas ones —
     and engine lanes remain replayable per image.
+
+    On a guided sampler each step also evaluates the conditional branch
+    ``cond_fn(x, t, label)`` and combines ``ε̂_u + w·(ε̂_c − ε̂_u)`` (w is
+    static, so ``w=0`` compiles to the literal unguided chain — the key
+    discipline and noise draws never see the second branch).  Without a
+    ``cond_fn`` (unconditional model) both branches are the same call.
     """
     K = sampler.K
     pos_to = K if pos_to is None else pos_to
@@ -245,6 +292,7 @@ def sample_trajectory(sched: DiffusionSchedule, sampler: Sampler,
     backend = get_backend(backend)
     tables = sampler.tables(sched)
     traj_t = jnp.asarray(sampler.trajectory.timesteps, jnp.int32)
+    w = sampler.w
 
     def body(i, carry):
         x, k = carry
@@ -252,6 +300,13 @@ def sample_trajectory(sched: DiffusionSchedule, sampler: Sampler,
         k, k_n = jax.random.split(k)
         tb = jnp.full((b,), traj_t[pos], jnp.int32)
         eps_hat = model_fn(x, tb)
+        if sampler.guided and w != 0.0:
+            if cond_fn is not None:
+                yb = jnp.full((b,), label, jnp.int32)
+                eps_c = cond_fn(x, tb, yb)
+            else:
+                eps_c = eps_hat
+            eps_hat = eps_hat + w * (eps_c - eps_hat)
         noise = jax.random.normal(k_n, x.shape, x.dtype)
         cols = jnp.full((b,), pos, jnp.int32)
         x = backend.index_step(x, cols, eps_hat, noise, tables, clip=clip)

@@ -117,16 +117,20 @@ def index_step_coefs(tables, cols) -> jnp.ndarray:
     return jnp.stack([g[0], jax.lax.rsqrt(g[1]), g[2], g[3]], axis=-1)
 
 
-def masked_step_bytes(x, C: int, *, block: int = 4096) -> int:
+def masked_step_bytes(x, C: int, *, block: int = 4096,
+                      rows: int = 4) -> int:
     """HBM bytes the fused masked kernel advertises to XLA (its
     ``pl.CostEstimate``): one read of (x, ε̂, z) + one write of the output
     — accounting the block padding the kernel actually streams — plus the
-    SMEM-staged (4, C) table and per-lane (S, 2) meta ints."""
+    SMEM-staged (rows, C) table and per-lane (S, 2) meta ints.  ``rows``
+    is 4 for the bare (c_eps, ar, sigma, keep) table and 5 when the menu
+    carries the classifier-free-guidance row (the kernel stages whatever
+    it is handed; the update only reads rows 0-3)."""
     s = x.shape[0]
     d = x.size // s
     blk = min(block, d)
     dp = d + ((-d) % blk)
-    return 4 * s * dp * x.dtype.itemsize + 4 * C * 4 + s * 2 * 4
+    return 4 * s * dp * x.dtype.itemsize + rows * C * 4 + s * 2 * 4
 
 
 def lane_meta(cols, active, C: int) -> jnp.ndarray:
@@ -147,8 +151,10 @@ def lane_meta(cols, active, C: int) -> jnp.ndarray:
 
 def _masked_step_kernel(meta_ref, tab_ref, x_ref, eps_ref, noise_ref, o_ref,
                         *, clip):
-    """meta: (1, 2) i32 = (col_safe, active) in SMEM; tab: (4, C) f32 in
-    SMEM (rows c_eps, ar, sigma, keep); x/eps/noise/o: (1, blk) VMEM."""
+    """meta: (1, 2) i32 = (col_safe, active) in SMEM; tab: (rows, C) f32 in
+    SMEM (rows 0-3 = c_eps, ar, sigma, keep; any further rows — e.g. the
+    guidance row — are combine metadata consumed BEFORE this kernel and
+    merely ride along in SMEM); x/eps/noise/o: (1, blk) VMEM."""
     col = meta_ref[0, 0]
     act = meta_ref[0, 1]
     c_eps = tab_ref[0, col]
@@ -174,14 +180,17 @@ def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
 
     x/eps_hat/noise: (S, ...); cols: (S,) int32 per-lane table column (ANY
     value — clamped into [0, C) so idle lanes gather in-range entries);
-    active: (S,) bool; tables: canonical (4, C) coefficient table.  Per
-    lane: where active, x <- clip(step(x, cols), ±clip); otherwise x passes
-    through bit-unchanged.  Where the column's keep flag is 0 (σ == 0 —
-    e.g. the final trajectory step) the noise term is dropped, matching
-    ``ddpm.p_sample``'s deterministic last step.
+    active: (S,) bool; tables: canonical (rows, C) coefficient table —
+    (4, C) bare or (5, C) with the guidance row, which the update ignores
+    (the ε̂-combine happens before this kernel, so guided and unguided
+    lanes run the SAME program).  Per lane: where active, x <-
+    clip(step(x, cols), ±clip); otherwise x passes through bit-unchanged.
+    Where the column's keep flag is 0 (σ == 0 — e.g. the final trajectory
+    step) the noise term is dropped, matching ``ddpm.p_sample``'s
+    deterministic last step.
     """
     s = x.shape[0]
-    C = tables.shape[1]
+    rows, C = tables.shape
     meta = lane_meta(cols, active, C)
     flat = x.reshape(s, -1)
     d = flat.shape[1]
@@ -200,7 +209,7 @@ def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
         in_specs=[
             pl.BlockSpec((1, 2), lambda ib, ic: (ib, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((4, C), lambda ib, ic: (0, 0),
+            pl.BlockSpec((rows, C), lambda ib, ic: (0, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
             pl.BlockSpec((1, blk), lambda ib, ic: (ib, ic)),
@@ -210,7 +219,7 @@ def traj_masked_step(x, cols, eps_hat, noise, active, tables, *,
         out_shape=jax.ShapeDtypeStruct((s, dp), x.dtype),
         cost_estimate=pl.CostEstimate(
             flops=7 * s * dp, transcendentals=0,
-            bytes_accessed=masked_step_bytes(x, C, block=block)),
+            bytes_accessed=masked_step_bytes(x, C, block=block, rows=rows)),
         interpret=interpret,
     )(meta, tables, flat, eps2, z2)
     if pad:

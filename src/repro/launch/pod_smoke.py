@@ -28,6 +28,8 @@ import json
 T = 10
 SIZE = 6
 SHAPE = (SIZE, SIZE, 1)
+NUM_CLASSES = 3          # conditional world: labels 0..2, null row 3
+GUIDANCE_W = 1.5         # the menu's guided entry (ddpm_g)
 
 
 def _parse_args(argv=None):
@@ -76,21 +78,29 @@ def build_world():
     from repro.diffusion.schedule import cosine_schedule
 
     d = SIZE * SIZE
-    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
     server = {"w1": jax.random.normal(ks[0], (d + 8, 32)) / 6.0,
-              "w2": jax.random.normal(ks[1], (32, d)) / 6.0}
+              "w2": jax.random.normal(ks[1], (32, d)) / 6.0,
+              # class conditioning: one embedding row per label + a null
+              # row (index NUM_CLASSES) added to the 8-dim time embedding
+              "yemb": jax.random.normal(
+                  ks[2], (NUM_CLASSES + 1, 8)) / 6.0}
 
-    def apply_fn(p, x, t):
+    def apply_fn(p, x, t, y=None):
         b = x.shape[0]
         freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
         ang = t[:, None].astype(jnp.float32) * freqs[None]
         temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        yc = (jnp.full((b,), NUM_CLASSES, jnp.int32) if y is None
+              else jnp.clip(y, 0, NUM_CLASSES))
+        temb = temb + p["yemb"][yc]
         h = jax.nn.silu(
             jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
         return (h @ p["w2"]).reshape(x.shape)
 
     samplers = {"ddpm": make_sampler(T),
-                "ddim5": make_sampler(T, "ddim", 5, eta=0.0)}
+                "ddim5": make_sampler(T, "ddim", 5, eta=0.0),
+                "ddpm_g": make_sampler(T, guidance=GUIDANCE_W)}
     return cosine_schedule(T), apply_fn, server, samplers
 
 
@@ -104,9 +114,11 @@ def build_client_stack(n_clients):
     d = SIZE * SIZE
 
     def one(key):
-        k1, k2 = jax.random.split(key)
+        k1, k2, k3 = jax.random.split(key, 3)
         return {"w1": jax.random.normal(k1, (d + 8, 32)) / 6.0,
-                "w2": jax.random.normal(k2, (32, d)) / 6.0}
+                "w2": jax.random.normal(k2, (32, d)) / 6.0,
+                "yemb": jax.random.normal(
+                    k3, (NUM_CLASSES + 1, 8)) / 6.0}
     return adamw.tree_stack(
         [one(k) for k in
          jax.random.split(jax.random.PRNGKey(3), n_clients)])
@@ -116,10 +128,13 @@ def build_requests(n):
     import jax
 
     from repro.serve import Request
+    # index 2 mod 3 routes through the guided menu entry — every smoke
+    # (n >= 3) carries at least one cond+uncond lane pair through the pod
     return [Request(req_id=i, key=jax.random.fold_in(jax.random.PRNGKey(7), i),
                     batch=1 + i % 2, cut_ratio=(0.25, 0.5, 0.75)[i % 3],
                     client_idx=0, arrival_tick=i % 3,
-                    sampler=("ddpm", "ddim5")[i % 2])
+                    sampler=("ddpm", "ddim5", "ddpm_g")[i % 3],
+                    label=i % NUM_CLASSES)
             for i in range(n)]
 
 
@@ -146,7 +161,7 @@ def serve_pod(num_processes, process_id, slots, n_requests, k, depth,
                        host_id=process_id if num_processes > 1 else 0,
                        finish_mode=finish_mode,
                        finish_async_depth=finish_async_depth,
-                       obs=obs)
+                       obs=obs, num_classes=NUM_CLASSES)
     stack = build_client_stack(clients) if clients else None
     return ServeEngine(cfg, server).serve(build_requests(n_requests),
                                           stack)

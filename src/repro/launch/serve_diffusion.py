@@ -43,6 +43,19 @@ def _parse_args(argv=None):
                          "trajectory point)")
     ap.add_argument("--num-steps", type=int, default=0,
                     help="DDIM trajectory length K (0 = dense T steps)")
+    ap.add_argument("--guidance", type=float, default=None,
+                    help="classifier-free guidance scale w: adds a guided "
+                         "'ddpm_g' menu entry and routes requests through "
+                         "it (all of them, or cycled with the unguided "
+                         "entries under --mix).  Guided requests occupy a "
+                         "cond+uncond lane pair — 2x lanes, one model "
+                         "dispatch.  Requires --num-classes > 0; w=0 is "
+                         "the bitwise-vs-unguided correctness anchor")
+    ap.add_argument("--num-classes", type=int, default=0,
+                    help="class-conditional U-Net: N real labels + a null "
+                         "row (index N) added to the time embedding.  0 "
+                         "keeps the unconditional model (bitwise the old "
+                         "path)")
     ap.add_argument("--eta", type=float, default=0.0,
                     help="DDIM stochasticity in [0,1]; 1 on the dense "
                          "trajectory is the DDPM ancestral step")
@@ -144,32 +157,44 @@ def main(argv=None):
     if args.sampler == "ddpm" and args.num_steps:
         raise SystemExit("--num-steps strides the chain, which needs "
                          "--sampler ddim (ddpm is dense-only)")
+    if args.guidance is not None and args.num_classes <= 0:
+        raise SystemExit("--guidance needs a conditional model: pass "
+                         "--num-classes N (labels 0..N-1, null row N)")
     samplers = {"ddpm": make_sampler(args.T)}
     if args.sampler == "ddim" or args.mix:
         samplers["ddim"] = make_sampler(
             args.T, "ddim", args.num_steps or max(2, args.T // 2),
             args.eta)
+    if args.guidance is not None:
+        samplers["ddpm_g"] = make_sampler(args.T, guidance=args.guidance)
     dyn_sampler = None
     if args.spare_columns:
         k_dyn = min(args.spare_columns, max(2, args.T // 4))
         dyn_sampler = make_sampler(args.T, "ddim", k_dyn, args.eta)
-    request_samplers = [args.sampler]
+    request_samplers = ["ddpm_g" if args.guidance is not None
+                        else args.sampler]
     if args.mix:
+        # heterogeneous traffic cycles the WHOLE menu: guided x unguided
+        # x (below) every --cut-ratios value
         request_samplers = list(samplers) + (["dyn"] if dyn_sampler
                                              else [])
     traffic = ("mix of " + "/".join(request_samplers) if args.mix
-               else samplers[args.sampler].describe())
+               else samplers[request_samplers[0]].describe())
     print(f"serve_diffusion: mesh=data:{d}xmodel:{m} slots={args.slots} "
           f"requests={args.requests} T={args.T} policy={args.policy} "
           f"backend={args.step_backend} sampler={traffic} "
           f"pack={args.pack} spare_columns={args.spare_columns} "
-          f"min_kid={args.min_kid}")
+          f"min_kid={args.min_kid} guidance={args.guidance} "
+          f"num_classes={args.num_classes}")
 
     ucfg = dataclasses.replace(
         UNetConfig().reduced(), image_size=args.image, base_channels=8,
         channel_mults=(1, 2), n_res_blocks=1, attn_resolutions=(),
-        time_dim=32, norm_groups=4)
-    apply_fn = lambda p, x, t: unet.forward(p, x, t, ucfg)
+        time_dim=32, norm_groups=4, num_classes=args.num_classes)
+    if args.num_classes > 0:
+        apply_fn = lambda p, x, t, y=None: unet.forward(p, x, t, ucfg, y)
+    else:
+        apply_fn = lambda p, x, t: unet.forward(p, x, t, ucfg)
     sched = cosine_schedule(args.T)
 
     key = jax.random.PRNGKey(args.seed)
@@ -190,7 +215,9 @@ def main(argv=None):
                     cut_ratio=args.cut_ratios[i % len(args.cut_ratios)],
                     client_idx=i % args.clients,
                     arrival_tick=i * args.arrival_every,
-                    sampler=request_samplers[i % len(request_samplers)])
+                    sampler=request_samplers[i % len(request_samplers)],
+                    label=(i % args.num_classes) if args.num_classes
+                          else 0)
             for i in range(args.requests)
         ]
 
@@ -223,7 +250,8 @@ def main(argv=None):
             admission=admission, spare_columns=args.spare_columns,
             ticks_per_dispatch=args.ticks_per_dispatch,
             async_depth=args.async_depth, finish_mode=args.finish_mode,
-            finish_async_depth=args.finish_async_depth, obs=obs)
+            finish_async_depth=args.finish_async_depth, obs=obs,
+            num_classes=args.num_classes)
         eng = ServeEngine(cfg, server_params)
         if dyn_sampler is not None:
             eng.register_sampler("dyn", dyn_sampler)

@@ -114,6 +114,12 @@ def init_params(key, cfg: UNetConfig):
                       "bias": jnp.zeros((td,), dtype)},
         "conv_in": conv_init(next(ks), 3, 3, cfg.in_channels, ch, dtype),
     }
+    if cfg.num_classes:
+        # class-conditioning table added to the time embedding; the LAST
+        # row (index num_classes) is the null label — the uncond branch of
+        # classifier-free guidance and the label-dropout target
+        p["label_emb"] = dense_init(next(ks), (cfg.num_classes + 1, td),
+                                    td, dtype=dtype)
     res = cfg.image_size
     chans = [ch]
     cur = ch
@@ -162,13 +168,24 @@ def init_params(key, cfg: UNetConfig):
     return p
 
 
-def forward(params, x, t, cfg: UNetConfig):
-    """x: (B,H,W,C) noised image; t: (B,) int timesteps -> eps_hat."""
+def forward(params, x, t, cfg: UNetConfig, y=None):
+    """x: (B,H,W,C) noised image; t: (B,) int timesteps -> eps_hat.
+
+    ``y``: (B,) int class labels when ``cfg.num_classes`` > 0 — the label
+    embedding (null row = ``num_classes``) is added to the time embedding,
+    so the uncond branch of classifier-free guidance is just the null
+    label.  ``y=None`` on a conditional config conditions on the null
+    label everywhere (the unguided/uncond path)."""
     g = cfg.norm_groups
     temb = time_embedding(t, cfg.time_dim)
     temb = jax.nn.silu(temb @ params["time_mlp1"]["w"] +
                        params["time_mlp1"]["bias"])
     temb = temb @ params["time_mlp2"]["w"] + params["time_mlp2"]["bias"]
+    if cfg.num_classes:
+        if y is None:
+            y = jnp.full(x.shape[:1], cfg.num_classes, jnp.int32)
+        yc = jnp.clip(y.astype(jnp.int32), 0, cfg.num_classes)
+        temb = temb + params["label_emb"][yc]
 
     h = conv(x, params["conv_in"])
     skips = [h]

@@ -22,9 +22,17 @@ ONLINE admission guarantee:
   ``Trajectory.cut_pos``'s nearest-t_split rule alone is NOT privacy-safe
   even though its ties break noisier.  If no position on the trajectory
   clears, the request is REJECTED with a typed :class:`AdmissionDecision`.
-* Scores are jitted and cached per (sampler, position) and decisions per
-  (sampler, cut_ratio), so gating costs O(menu × cuts) model work — not
-  O(requests) — regardless of traffic volume.
+* Scores are jitted and cached per (sampler, position, guidance w) and
+  decisions per (sampler, cut_ratio), so gating costs O(menu × cuts)
+  model work — not O(requests) — regardless of traffic volume.  GUIDED
+  samplers are scored on the GUIDED trajectory (the ε̂-combine with the
+  conditional model is what actually shapes the disclosed tensor); at
+  w=0 the guided trajectory is bitwise the unguided one, so decisions
+  match exactly — the serving path's correctness anchor.
+* Weight swaps are SAFE: re-binding a server model whose outputs diverge
+  from the bound one bumps ``params_version`` and invalidates every
+  cached score and decision, so stale KIDs computed under old weights
+  can never gate traffic served by new ones.
 
 Placement: the scheduler consults the policy at ``select`` (a rejected
 request is dropped from the queue before it can occupy a slot), the engine
@@ -115,8 +123,8 @@ class AdmissionPolicy:
     def __init__(self, sched: DiffusionSchedule, calib, *,
                  min_kid: float = 0.0,
                  samplers: Optional[Dict[str, Sampler]] = None,
-                 server_fn=None, feat_params=None, key=None,
-                 backend: BackendLike = None):
+                 server_fn=None, cond_server_fn=None, feat_params=None,
+                 key=None, backend: BackendLike = None):
         self.sched = sched
         self.calib = jnp.asarray(calib, jnp.float32)
         assert self.calib.ndim == 4, \
@@ -127,6 +135,8 @@ class AdmissionPolicy:
         self.min_kid = float(min_kid)
         self.samplers = dict(samplers) if samplers is not None else None
         self.server_fn = server_fn
+        self.cond_server_fn = cond_server_fn     # (x, t, y) for guided scoring
+        self.params_version = 0                  # bumped on weight swaps
         self.feat_params = (feat_params if feat_params is not None else
                             privacy.feature_params(in_ch=self.calib.shape[-1]))
         self.key = key if key is not None else jax.random.PRNGKey(4242)
@@ -141,13 +151,21 @@ class AdmissionPolicy:
         self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------------
-    def bind(self, *, server_fn=None, samplers=None) -> None:
+    def bind(self, *, server_fn=None, samplers=None,
+             cond_server_fn=None) -> None:
         """Late-bind the pieces the engine owns.  Called by
         ``ServeEngine.__init__``; no-ops for pieces already set, except
-        that pre-set pieces must AGREE with the engine's: a policy whose
-        cached scores were computed against different trajectories — or a
-        different SERVER MODEL — must never gate them (its floor guarantee
-        would be silently void for the tensors actually emitted)."""
+        that pre-set pieces must AGREE with the engine's: cached scores
+        computed against different trajectories must never gate them.
+
+        A server model that DISAGREES with the bound one is a WEIGHT
+        SWAP, not an error: the policy adopts the new model, bumps
+        ``params_version`` and drops every cached score and decision
+        (``_kid_cache`` is cleared IN PLACE so :meth:`with_min_kid`
+        clones see the invalidation too), so the next ``decide``
+        re-scores under the weights that will actually emit tensors —
+        stale KIDs from old weights can never void the floor guarantee
+        (regression-tested in tests/test_serve.py)."""
         if server_fn is not None:
             if self.server_fn is None:
                 self.server_fn = server_fn
@@ -157,19 +175,45 @@ class AdmissionPolicy:
                 # timestep (one tiny model call, once per engine build)
                 t = jnp.full((1,), self.sched.T, jnp.int32)
                 x = self.calib[:1]
-                assert bool(jnp.allclose(self.server_fn(x, t),
+                if not bool(jnp.allclose(self.server_fn(x, t),
                                          server_fn(x, t),
-                                         rtol=1e-5, atol=1e-6)), \
-                    "admission policy's server_fn disagrees with the " \
-                    "engine's server model: disclosure scores calibrated " \
-                    "under one set of weights must not gate another " \
-                    "(rebuild the policy against this engine's model)"
+                                         rtol=1e-5, atol=1e-6)):
+                    self.server_fn = server_fn
+                    self._bump_params_version()
+        if cond_server_fn is not None:
+            if self.cond_server_fn is None:
+                self.cond_server_fn = cond_server_fn
+                # guided scores cached so far ran eps_c = eps_u (no cond
+                # model bound): only correct at w=0 — re-score under the
+                # real conditional branch
+                if any(len(ck) > 2 and ck[2] is not None
+                       for ck in self._kid_cache):
+                    self._bump_params_version()
+            else:
+                t = jnp.full((1,), self.sched.T, jnp.int32)
+                x = self.calib[:1]
+                y = jnp.zeros((1,), jnp.int32)
+                if not bool(jnp.allclose(self.cond_server_fn(x, t, y),
+                                         cond_server_fn(x, t, y),
+                                         rtol=1e-5, atol=1e-6)):
+                    self.cond_server_fn = cond_server_fn
+                    self._bump_params_version()
         if samplers is not None:
             if self.samplers is None:
                 self.samplers = dict(samplers)
             else:
                 assert_same_menu(self.samplers, samplers,
                                  "admission policy", "engine")
+
+    def _bump_params_version(self) -> None:
+        """Invalidate EVERYTHING scored under the previous weights: the
+        score cache (in place — shared with :meth:`with_min_kid` clones),
+        the decision cache, and the jitted scorer (its traced programs
+        baked the old ``server_fn`` closure per static (sampler, pos))."""
+        self.params_version += 1
+        self._kid_cache.clear()
+        self._decision_cache.clear()
+        self._kid_fn = None
 
     def register_sampler(self, name: str, sampler: Sampler) -> None:
         """Add (or replace) one menu entry at run time — the admission
@@ -207,11 +251,13 @@ class AdmissionPolicy:
         the benchmark pay the O(menu × cuts) scoring once this way."""
         p = AdmissionPolicy(self.sched, self.calib, min_kid=min_kid,
                             samplers=self.samplers, server_fn=self.server_fn,
+                            cond_server_fn=self.cond_server_fn,
                             feat_params=self.feat_params, key=self.key,
                             backend=self.backend)
         p._calib_feats = self._calib_feats
         p._kid_fn = self._kid_fn
         p._kid_cache = self._kid_cache           # shared, floor-independent
+        p.params_version = self.params_version
         p.tracer = self.tracer
         return p
 
@@ -226,9 +272,17 @@ class AdmissionPolicy:
                 "its own server model"
 
             def _kid(calib, calib_feats, key, sampler, pos):
+                # guided samplers are scored on the GUIDED trajectory:
+                # sampler is static, so the cond branch traces only for
+                # guided menu entries; scores are label-independent here
+                # (one shared label embedding row shift cannot move the
+                # KID floor decision, and caching per label would make
+                # gating O(requests) again)
+                cond = (self.cond_server_fn
+                        if sampler.guided and sampler.w != 0.0 else None)
                 disclosed = collafuse.disclosed_at_pos(
                     self.sched, sampler, self.server_fn, key, calib, pos,
-                    backend=self.backend)
+                    backend=self.backend, cond_fn=cond, label=0)
                 feats = privacy.extract_features(self.feat_params, disclosed)
                 return privacy.kid_from_features(calib_feats, feats)
 
@@ -237,9 +291,11 @@ class AdmissionPolicy:
 
     def disclosure_kid(self, sampler_name: str, pos: int) -> float:
         """Disclosure KID of x at trajectory position ``pos`` under
-        ``sampler_name``, on the calibration batch (cached; one jitted
-        program per (sampler, position) ever runs)."""
-        ck = (sampler_name, int(pos))
+        ``sampler_name``, on the calibration batch (cached per (sampler,
+        position, guidance w); one jitted program per key ever runs)."""
+        smp0 = (self.samplers or {}).get(sampler_name)
+        w_key = smp0.w if smp0 is not None and smp0.guided else None
+        ck = (sampler_name, int(pos), w_key)
         if ck not in self._kid_cache:
             assert self.samplers is not None and sampler_name in self.samplers, \
                 f"unknown sampler {sampler_name!r}; policy menu: " \

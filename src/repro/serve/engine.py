@@ -74,14 +74,14 @@ import numpy as np
 
 from repro.core import collafuse
 from repro.core.collafuse import CutPlan
-from repro.diffusion.backend import (BackendLike, get_backend,
-                                     make_lane_tick)
+from repro.diffusion.backend import (GUIDANCE_ROW, N_TABLE_ROWS, BackendLike,
+                                     get_backend, make_lane_tick)
 from repro.diffusion.sampler import Sampler, assert_same_menu, default_samplers
 from repro.diffusion.schedule import DiffusionSchedule
 from repro.obs import NULL_OBS, Observability, ObsConfig, resolve_obs
 from repro.serve.admission import AdmissionDecision, AdmissionPolicy
 from repro.serve.metrics import ServeMetrics, finish_summary
-from repro.serve.scheduler import CutRatioScheduler, FIFOScheduler, Request
+from repro.serve.scheduler import FIFOScheduler, Request
 
 
 @dataclasses.dataclass
@@ -165,6 +165,15 @@ class EngineConfig:
       depth, the exact analogue of ``async_depth``: 1 syncs each finish
       batch at the boundary that dispatched it, 2 keeps one batch in
       flight while the next server window computes.
+    * ``num_classes`` > 0 switches the engine CONDITIONAL: ``apply_fn``
+      takes ``(params, x, t, y)`` (y = int32 class labels; index
+      ``num_classes`` is the null label) and requests may name GUIDED
+      samplers (``make_sampler(..., guidance=w)``).  A guided request
+      occupies a cond+uncond lane PAIR per image — both lanes ride the
+      same model dispatch and fused step (the ε̂-combine happens in the
+      backend's ``guided_masked_index_step``), so mixed guided/unguided
+      traffic stays ONE program.  ``num_classes == 0`` (default) keeps
+      the classic 3-arg convention and rejects guided menu entries.
     * ``spare_columns`` preallocates extra columns in the engine's
       concatenated coefficient table (plus matching spare menu rows) so
       :meth:`ServeEngine.register_sampler` can write an AD-HOC
@@ -193,6 +202,7 @@ class EngineConfig:
     finish_mode: str = "stream"
     finish_async_depth: int = 1
     spare_columns: int = 0
+    num_classes: int = 0
     # observability: None (default, zero-cost off), an ObsConfig, or a
     # shared Observability instance (e.g. one bundle for engine + trainer)
     obs: Any = None
@@ -223,6 +233,14 @@ class EngineConfig:
         assert self.slots % self.hosts == 0, \
             f"slots={self.slots} not divisible by hosts={self.hosts} — " \
             "lane ownership is contiguous equal blocks"
+        assert self.num_classes >= 0, self.num_classes
+        if self.samplers is not None and self.num_classes == 0:
+            for name, s in self.samplers.items():
+                assert not s.guided, \
+                    f"sampler {name!r} is guided (w={s.w:g}) but " \
+                    "num_classes == 0 — classifier-free guidance needs a " \
+                    "conditional engine (EngineConfig(num_classes=N) and " \
+                    "a 4-arg apply_fn)"
         if self.host_id is not None:
             assert 0 <= self.host_id < self.hosts, \
                 f"host_id={self.host_id} outside [0, {self.hosts})"
@@ -466,21 +484,29 @@ class ServeEngine:
         self.async_depth = cfg.async_depth
         self.finish_mode = cfg.finish_mode
         self.finish_async_depth = cfg.finish_async_depth
+        self.num_classes = cfg.num_classes
+        self._conditional = cfg.num_classes > 0
         self.samplers = dict(cfg.samplers) if cfg.samplers is not None \
             else default_samplers(self.sched.T)
         for name, s in self.samplers.items():
             assert s.trajectory.T == self.sched.T, \
                 f"sampler {name!r} built for T={s.trajectory.T}, " \
                 f"engine schedule has T={self.sched.T}"
-        if isinstance(self.scheduler, CutRatioScheduler):
-            if self.scheduler.samplers is None:
+            assert not s.guided or self._conditional, \
+                f"sampler {name!r} is guided but the engine is " \
+                "unconditional (EngineConfig.num_classes == 0)"
+        if getattr(self.scheduler, "samplers", None) is None:
+            if hasattr(self.scheduler, "samplers"):
+                # the lane-costing (and SJF pricing) menu: scheduler and
+                # engine must agree on which samplers are guided or the
+                # budget walk over- or under-commits the slot pool
                 self.scheduler.samplers = self.samplers
-            else:
-                # a scheduler scoring a DIFFERENT menu would silently fall
-                # back to the dense (1-c)·T cost for names it doesn't know
-                # and misorder SJF — fail here, at construction
-                assert_same_menu(self.scheduler.samplers, self.samplers,
-                                 "scheduler", "engine")
+        else:
+            # a scheduler scoring a DIFFERENT menu would silently fall
+            # back to the dense (1-c)·T cost for names it doesn't know
+            # and misorder SJF — fail here, at construction
+            assert_same_menu(self.scheduler.samplers, self.samplers,
+                             "scheduler", "engine")
         # ---- KID-gated admission (repro.serve.admission) ----------------
         # engine and scheduler must share ONE policy: the scheduler gates
         # at select, the engine derives slot `end` counters / FLOPs from
@@ -493,9 +519,25 @@ class ServeEngine:
             assert admission.sched.T == self.sched.T, \
                 f"admission policy calibrated for T={admission.sched.T}, " \
                 f"engine schedule has T={self.sched.T}"
-            admission.bind(
-                server_fn=functools.partial(self.apply_fn, server_params),
-                samplers=self.samplers)
+            if self._conditional:
+                # the unconditional (x, t) view bakes the null label in;
+                # the (x, t, y) view scores guided trajectories on the
+                # conditional branch the serving path actually runs
+                nc = self.num_classes
+
+                def _uncond_fn(x, t, _p=server_params):
+                    yn = jnp.full(x.shape[:1], nc, jnp.int32)
+                    return self.apply_fn(_p, x, t, yn)
+
+                admission.bind(
+                    server_fn=_uncond_fn, samplers=self.samplers,
+                    cond_server_fn=functools.partial(self.apply_fn,
+                                                     server_params))
+            else:
+                admission.bind(
+                    server_fn=functools.partial(self.apply_fn,
+                                                server_params),
+                    samplers=self.samplers)
             if self.scheduler.admission is None:
                 self.scheduler.admission = admission
             assert self.scheduler.admission is admission, \
@@ -541,13 +583,15 @@ class ServeEngine:
         # a dynamic trajectory occupies >= 1 column, so spare_columns
         # bounds the number of dynamic menu rows too
         n_rows = len(menu) + cfg.spare_columns
-        tables = np.zeros((4, self._static_cols + cfg.spare_columns),
+        tables = np.zeros((N_TABLE_ROWS,
+                           self._static_cols + cfg.spare_columns),
                           np.float32)
         tables[:, :self._static_cols] = np.concatenate(
             [np.asarray(s.tables(self.sched)) for s in menu], axis=1)
         # unwritten spare columns are the identity step (c_eps=0, ar=1,
-        # sigma=0, keep=0): a clamped junk gather from a retired/empty
-        # lane passes x through instead of dividing by sqrt(0)
+        # sigma=0, keep=0) at guidance w=0 (row GUIDANCE_ROW stays the
+        # zero fill): a clamped junk gather from a retired/empty lane
+        # passes x through instead of dividing by sqrt(0)
         tables[1, self._static_cols:] = 1.0
         offsets = np.zeros(n_rows, np.int32)
         offsets[:len(menu)] = np.cumsum([0] + lens[:-1])
@@ -565,13 +609,19 @@ class ServeEngine:
             if cfg.spare_columns else []
         self._use_clock = itertools.count(1)
         self._serving = False
+        # guided_masked_index_step handles BOTH lane kinds in one fused
+        # program: solo lanes (pair == own index) take the raw model eps
+        # verbatim, paired lanes combine ε̂_u + w·(ε̂_c − ε̂_u) before the
+        # shared masked step — so mixed guided/unguided traffic never
+        # forks the scan program
         self._masked_index = functools.partial(
-            self.backend.masked_index_step, clip=self.clip)
+            self.backend.guided_masked_index_step, clip=self.clip)
         # the ONE lane tick both the k-scan window and the client finisher
         # run — see repro.diffusion.backend.make_lane_tick for the
         # done-latching contract the scan boundary relies on
         self._lane_tick = make_lane_tick(
-            self.apply_fn, self._masked_index, kmax, self.image_shape)
+            self.apply_fn, self._masked_index, kmax, self.image_shape,
+            conditional=self._conditional)
         # per-request key derivation, jitted per batch size: the eager
         # vmapped fold_in/split trace costs ~5ms per ADMISSION, which at
         # pod scale (hundreds of in-flight requests) would dwarf the
@@ -629,6 +679,14 @@ class ServeEngine:
             "traj": jnp.zeros((s,), jnp.int32),     # sampler-menu id
             "key": jnp.zeros((s, 2), jnp.uint32),
             "active": jnp.zeros((s,), bool),
+            # conditional-serving lane state: class label (null for
+            # unguided/shadow lanes), guided-pair partner index (own index
+            # = solo, the init value — MUST be self-pairs so idle lanes
+            # take the raw-eps path of guided_masked_index_step), and the
+            # primary-lane flag (False only on a pair's uncond shadow)
+            "y": jnp.full((s,), self.num_classes, jnp.int32),
+            "pair": jnp.arange(s, dtype=jnp.int32),
+            "cond": jnp.ones((s,), bool),
         }
         if self._slot_shardings is not None:
             state = jax.device_put(state, self._slot_shardings)
@@ -648,10 +706,13 @@ class ServeEngine:
             def body(st, _):
                 x, pos, key, done = self._lane_tick(
                     params, menu, st["x"], st["pos"], st["key"], st["end"],
-                    st["traj"], st["active"])
+                    st["traj"], st["active"], st["y"], st["pair"],
+                    st["cond"])
                 new = {"x": x, "pos": pos, "end": st["end"],
                        "traj": st["traj"], "key": key,
-                       "active": st["active"] & ~done}
+                       "active": st["active"] & ~done,
+                       "y": st["y"], "pair": st["pair"],
+                       "cond": st["cond"]}
                 if self._slot_shardings is not None:
                     new = jax.lax.with_sharding_constraint(
                         new, self._slot_shardings)
@@ -671,12 +732,21 @@ class ServeEngine:
             # batched model call per client, with NO per-lane gather of a
             # full private-model copy from the stack.
             n_steps = jnp.max(jnp.where(valid, end - pos, 0))
+            # the client segment is ALWAYS unguided — every finisher lane
+            # is its own pair (solo ⇒ raw eps even on a guided sampler's
+            # columns) conditioned on the null label; this is what keeps
+            # the private client finish bitwise the pre-guidance path
+            width = x.shape[1]
+            y_null = jnp.full((width,), self.num_classes, jnp.int32)
+            pair_solo = jnp.arange(width, dtype=jnp.int32)
+            cond_prim = jnp.ones((width,), bool)
 
             def per_client(params, xg, pg, eg, tg, kg, vg):
                 def body(_, carry):
                     xc, p, key = carry
                     xc, p, key, _ = self._lane_tick(
-                        params, menu, xc, p, key, eg, tg, vg)
+                        params, menu, xc, p, key, eg, tg, vg, y_null,
+                        pair_solo, cond_prim)
                     return (xc, p, key)
                 # traced bound -> one while-program shared by every cut mix
                 xo, _, _ = jax.lax.fori_loop(0, n_steps, body, (xg, pg, kg))
@@ -690,7 +760,9 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def register_sampler(self, name: str, sampler: Sampler) -> int:
         """Register an AD-HOC trajectory into the live engine — no
-        retrace.  The sampler's (4, K) coefficient block lands in
+        retrace.  The sampler's (5, K) coefficient block (step rows plus
+        its guidance-scale row, so guided trajectories register the same
+        way) lands in
         preallocated spare columns with ONE device scatter, its padded
         timestep row and column offset fill a spare menu row, and every
         jitted program (`_tick`, `_finish`, `_admit`) keeps its cache:
@@ -720,6 +792,9 @@ class ServeEngine:
         assert sampler.trajectory.T == self.sched.T, \
             f"sampler {name!r} built for T={sampler.trajectory.T}, " \
             f"engine schedule has T={self.sched.T}"
+        assert not sampler.guided or self._conditional, \
+            f"sampler {name!r} is guided (w={sampler.w:g}) but the " \
+            "engine is unconditional (EngineConfig.num_classes == 0)"
         assert sampler.K <= self._kmax, \
             f"dynamic sampler {name!r} has K={sampler.K} > kmax=" \
             f"{self._kmax} — the padded timestep rows are preallocated " \
@@ -833,38 +908,79 @@ class ServeEngine:
         cut = self._effective_cut(req)
         return cut, self._sampler_of(req).K - cut
 
+    def _lanes_of(self, req: Request) -> int:
+        """Slot-pool lanes the request occupies: ``batch`` images, ×2 when
+        its sampler is guided (one cond+uncond lane pair per image) — the
+        same costing the scheduler's budget walk uses."""
+        return req.batch * (2 if self._sampler_of(req).guided else 1)
+
     def _admit_host(self, req: Request, lanes: List[int], now: int,
                     inflight: Dict, lane_req: np.ndarray,
-                    lane_img: np.ndarray, metrics: ServeMetrics):
+                    lane_img: np.ndarray, lane_shadow: np.ndarray,
+                    metrics: ServeMetrics):
         """Host-side bookkeeping for one admitted request; returns its
-        (k_init, k_srv) key rows for the boundary's batched slot write."""
-        k_init, k_srv, k_cli = self._lane_keys(req.key, req.batch)
+        per-LANE (k_init, k_srv, y, pair, cond) rows for the boundary's
+        batched slot write.
+
+        GUIDED requests take ``2·batch`` lanes: ``lanes[:batch]`` are the
+        PRIMARY (cond, real-label) lanes carrying the request's normal
+        per-image key chain, ``lanes[batch:]`` their uncond SHADOWS —
+        same x_T draw (same k_init row), null label, mutual ``pair``
+        pointers.  Both members of a pair step to bit-identical x (the
+        shadow borrows the primary's noise inside the guided step), so
+        at w=0 the primary chain is bitwise the unguided one.  Shadows
+        are marked in ``lane_shadow`` so retirement never emits their
+        rows — a pair is ONE image of ONE request."""
+        smp = self._sampler_of(req)
+        b = req.batch
+        k_init, k_srv, k_cli = self._lane_keys(req.key, b)
+        k_init, k_srv = np.asarray(k_init), np.asarray(k_srv)
         lane_req[lanes] = req.req_id
-        lane_img[lanes] = np.arange(req.batch)
+        if smp.guided:
+            assert len(lanes) == 2 * b, (len(lanes), b)
+            lane_img[lanes] = np.concatenate([np.arange(b), np.arange(b)])
+            lane_shadow[lanes[b:]] = True
+            k_init = np.concatenate([k_init, k_init])   # shadow: same x_T
+            k_srv = np.concatenate([k_srv, k_srv])
+            ys = np.concatenate([np.full(b, req.label, np.int32),
+                                 np.full(b, self.num_classes, np.int32)])
+            pairs = np.concatenate([lanes[b:], lanes[:b]]).astype(np.int32)
+            conds = np.concatenate([np.ones(b, bool), np.zeros(b, bool)])
+        else:
+            assert len(lanes) == b, (len(lanes), b)
+            lane_img[lanes] = np.arange(b)
+            ys = np.full(b, self.num_classes, np.int32)
+            pairs = np.asarray(lanes, np.int32)         # solo: own index
+            conds = np.ones(b, bool)
         inflight[req.req_id] = {
-            "request": req, "remaining": req.batch, "admit_tick": now,
+            "request": req, "remaining": len(lanes), "admit_tick": now,
             "k_cli": np.asarray(k_cli),
-            "x_mid": np.zeros((req.batch,) + self.image_shape, np.float32),
-            "owned": np.zeros((req.batch,), bool),
+            "x_mid": np.zeros((b,) + self.image_shape, np.float32),
+            "owned": np.zeros((b,), bool),
             "exact_tick": -1,            # max exact finish over its lanes
             # trajectory class for the per-window occupancy mix: lanes
-            # sharing it retire at the same boundary when co-admitted
-            "cls": f"{req.sampler}@{self._effective_cut(req)}",
+            # sharing it retire at the same boundary when co-admitted;
+            # the guidance scale keys the class — guided pairs occupy two
+            # lane-ticks per image and must not pool with unguided lanes
+            "cls": f"{req.sampler}@{self._effective_cut(req)}@{smp.w:g}",
         }
         metrics.on_admit(req.req_id, now)
         if self.obs:
             self.obs.request(req.req_id, "admitted", tick=now,
                              lanes=[int(x) for x in lanes])
-        return k_init, k_srv
+        return k_init, k_srv, ys, pairs, conds
 
     def _make_admit(self):
-        """The fused boundary-refill program: x_T draw + all 6 slot
+        """The fused boundary-refill program: x_T draw + all 9 slot
         writes in ONE jit.  Pad rows carry ``idx == slots`` — out of
         bounds, so their scatter writes DROP (``mode="drop"``); real
         rows are bitwise identical to the old eager update chain (the
         vmapped per-lane draw is elementwise over the key rows, so
-        neighbours — padding included — never change a lane's x_T)."""
-        def admit(state, idx, k_init, k_srv, ends, trajs):
+        neighbours — padding included — never change a lane's x_T).  A
+        guided pair's shadow lane carries its primary's k_init row, so
+        both draw the SAME x_T."""
+        def admit(state, idx, k_init, k_srv, ends, trajs, ys, pairs,
+                  conds):
             x_T = jax.vmap(
                 lambda k: jax.random.normal(k, self.image_shape,
                                             jnp.float32))(k_init)
@@ -875,6 +991,9 @@ class ServeEngine:
                 "traj": state["traj"].at[idx].set(trajs, mode="drop"),
                 "key": state["key"].at[idx].set(k_srv, mode="drop"),
                 "active": state["active"].at[idx].set(True, mode="drop"),
+                "y": state["y"].at[idx].set(ys, mode="drop"),
+                "pair": state["pair"].at[idx].set(pairs, mode="drop"),
+                "cond": state["cond"].at[idx].set(conds, mode="drop"),
             }
         return admit
 
@@ -886,23 +1005,30 @@ class ServeEngine:
         dominate wall time, not the denoise compute).  The lane count is
         padded to the next power of two so the program compiles
         O(log slots) times, never per admit-batch shape."""
-        n = sum(len(ln) for _, ln, _, _ in admits)
+        n = sum(len(ln) for _, ln, *_ in admits)
         m = 1 << (n - 1).bit_length()
         lanes = np.full(m, self.slots, np.int32)   # pads point off-array
         k_init = np.zeros((m, 2), np.uint32)
         k_srv = np.zeros((m, 2), np.uint32)
         ends = np.zeros(m, np.int32)
         trajs = np.zeros(m, np.int32)
+        ys = np.zeros(m, np.int32)
+        pairs = np.zeros(m, np.int32)              # pad rows drop anyway
+        conds = np.ones(m, bool)
         off = 0
-        for req, ln, ki, ks in admits:
-            sl = slice(off, off + req.batch)
+        for req, ln, ki, ks, yr, pr, cr in admits:
+            sl = slice(off, off + len(ln))
             lanes[sl] = ln
-            k_init[sl] = np.asarray(ki)
-            k_srv[sl] = np.asarray(ks)
+            k_init[sl] = ki
+            k_srv[sl] = ks
             ends[sl] = self._effective_cut(req)
             trajs[sl] = self._traj_ids[req.sampler]
-            off += req.batch
-        return self._admit_prog(state, lanes, k_init, k_srv, ends, trajs)
+            ys[sl] = yr
+            pairs[sl] = pr
+            conds[sl] = cr
+            off += len(ln)
+        return self._admit_prog(state, lanes, k_init, k_srv, ends, trajs,
+                                ys, pairs, conds)
 
     def _host_rows(self, arr, lanes: List[int]) -> Dict[int, np.ndarray]:
         """Materialize ``arr[lane]`` for the lanes THIS host owns.
@@ -933,14 +1059,17 @@ class ServeEngine:
                     out[ln] = data[ln - start]
         return out
 
-    def _sync_window(self, win, inflight, lane_req, lane_img, completions,
-                     metrics) -> None:
+    def _sync_window(self, win, inflight, lane_req, lane_img, lane_shadow,
+                     completions, metrics) -> None:
         """Block on ONE in-flight window's done stack and run its retire
         bookkeeping.  ``retire_tick`` is the window BOUNDARY (start + k);
         the per-tick stack recovers each lane's exact finish for the
         boundary-lag metric (≤ k-1 by construction) and the EXACT
         per-tick occupancy samples (``ServeMetrics.on_window_exact`` —
-        the stack is already being synced, no new device round-trip)."""
+        the stack is already being synced, no new device round-trip).
+        A guided pair's SHADOW lane frees its slot here like any other
+        lane but never emits a row: no x_mid write, no ownership, no
+        boundary-lag sample — the pair is one image of one request."""
         done_seq, x_ref, start, n_active = win
         tracer = self.obs.tracer
         with tracer.span("sync_wait", start_tick=start):
@@ -954,14 +1083,16 @@ class ServeEngine:
         first = done_np.argmax(axis=0)           # first done tick per lane
         with tracer.span("retire", start_tick=start,
                          lanes=int(lanes.size)):
-            rows = self._host_rows(x_ref, lanes.tolist())
+            rows = self._host_rows(
+                x_ref, [ln for ln in lanes.tolist() if not lane_shadow[ln]])
             for lane in lanes.tolist():
-                metrics.on_boundary_lag(int(k - 1 - first[lane]))
                 rec = inflight[int(lane_req[lane])]
-                img = int(lane_img[lane])
-                if lane in rows:
-                    rec["x_mid"][img] = rows[lane]
-                    rec["owned"][img] = True
+                if not lane_shadow[lane]:
+                    metrics.on_boundary_lag(int(k - 1 - first[lane]))
+                    img = int(lane_img[lane])
+                    if lane in rows:
+                        rec["x_mid"][img] = rows[lane]
+                        rec["owned"][img] = True
                 rec["remaining"] -= 1
                 rec["exact_tick"] = max(rec["exact_tick"],
                                         start + int(first[lane]))
@@ -979,6 +1110,7 @@ class ServeEngine:
                     # lane is done at this boundary
                     self.scheduler.notify_retired(r, boundary)
                 lane_req[lane] = lane_img[lane] = -1
+                lane_shadow[lane] = False
 
     def _serve_server(self, requests: List[Request],
                       max_ticks: Optional[int] = None,
@@ -1011,8 +1143,11 @@ class ServeEngine:
         obs.timelines.reset()       # lifecycles are per serve() call
         decisions: Dict[int, AdmissionDecision] = {}
         for r in requests:
-            assert r.batch <= self.slots, \
-                f"request {r.req_id} batch {r.batch} > capacity {self.slots}"
+            assert self._lanes_of(r) <= self.slots, \
+                f"request {r.req_id} needs {self._lanes_of(r)} lanes " \
+                f"(batch {r.batch}" + \
+                (", guided ×2" if self._sampler_of(r).guided else "") + \
+                f") > capacity {self.slots}"
             self._sampler_of(r)                    # fail fast on bad names
             obs.request(r.req_id, "queued", tick=r.arrival_tick,
                         batch=r.batch, cut_ratio=r.cut_ratio,
@@ -1054,6 +1189,7 @@ class ServeEngine:
         state = self._init_state()
         lane_req = np.full(self.slots, -1, np.int64)
         lane_img = np.full(self.slots, -1, np.int64)
+        lane_shadow = np.zeros(self.slots, bool)   # uncond halves of pairs
         inflight: Dict[int, Dict] = {}
         completions: Dict[int, Completion] = {}
         # in-flight scan windows, oldest first: (done_seq devicearray,
@@ -1132,7 +1268,7 @@ class ServeEngine:
         def sync_oldest():
             nonlocal windows_synced
             self._sync_window(pending.popleft(), inflight, lane_req,
-                              lane_img, completions, metrics)
+                              lane_img, lane_shadow, completions, metrics)
             windows_synced += 1
             if metrics_path and windows_synced % metrics_every == 0:
                 obs.registry.write_jsonl(metrics_path, host=self.host_id,
@@ -1147,11 +1283,12 @@ class ServeEngine:
                     admits = []
                     for req in self.scheduler.select_window(
                             len(free), now, k):
-                        lanes, free = free[:req.batch], free[req.batch:]
-                        ki, ks = self._admit_host(req, lanes, now, inflight,
-                                                  lane_req, lane_img,
-                                                  metrics)
-                        admits.append((req, lanes, ki, ks))
+                        need = self._lanes_of(req)   # guided pair = 2/image
+                        lanes, free = free[:need], free[need:]
+                        row = self._admit_host(req, lanes, now, inflight,
+                                               lane_req, lane_img,
+                                               lane_shadow, metrics)
+                        admits.append((req, lanes) + row)
                     if admits:
                         state = self._admit_device(state, admits)
                 n_active = int((lane_req >= 0).sum())
@@ -1226,7 +1363,7 @@ class ServeEngine:
                         _profiler.stop_trace()
                         profile_on = False
                 if obs and admits:
-                    for req, _, _, _ in admits:
+                    for req, *_ in admits:
                         obs.request(req.req_id, "first_tick", tick=now)
                 now += k
                 # ---- drain the pipeline down to async_depth - 1 ---------
@@ -1269,7 +1406,9 @@ class ServeEngine:
             f"admission decisions"
         summary = metrics.summary(wall, self.sched.T, self.flops_per_call,
                                   requests, steps_of=self._steps_of,
-                                  decisions=decisions or None)
+                                  decisions=decisions or None,
+                                  guided_of=lambda r:
+                                      self._sampler_of(r).guided)
         summary["ticks_per_dispatch"] = k
         summary["async_depth"] = self.async_depth
         summary["aging_promotions"] = getattr(self.scheduler,

@@ -123,8 +123,10 @@ class ServeMetrics:
                       starved: bool, ticks: int) -> None:
         """Per-window trajectory-class occupancy + fragmentation sample,
         reported by the engine at each dispatch: ``class_lanes`` maps a
-        class label (``"<sampler>@<effective_cut>"``) to its live lanes
-        this window, ``free`` is the empty slots, and ``starved`` says
+        class label (``"<sampler>@<effective_cut>@<guidance w>"``) to its
+        live lanes this window — a guided request contributes 2 lanes per
+        image (its cond+uncond pair) but stays ONE request everywhere
+        requests are counted — ``free`` is the empty slots, ``starved`` says
         whether ARRIVED demand was left waiting in the queue.  Free slots
         in a starved window are FRAGMENTATION — capacity the scheduler
         could not shape the queue into (ragged frees vs batch>1 heads);
@@ -195,7 +197,8 @@ class ServeMetrics:
 
     def summary(self, wall_s: float, T: int, flops_per_call: float,
                 requests, steps_of: Optional[Callable] = None,
-                decisions: Optional[Dict] = None) -> Dict:
+                decisions: Optional[Dict] = None,
+                guided_of: Optional[Callable] = None) -> Dict:
         """Aggregate one run over ``requests`` (the completed Request
         objects) into the BENCH_serve.json record.
 
@@ -203,6 +206,14 @@ class ServeMetrics:
         per-request model-call counts — the engine passes its samplers'
         trajectory-relative split so strided (DDIM) requests are accounted
         at what they actually cost; the default is the dense CutPlan split.
+
+        ``guided_of(req) -> bool`` (default: nothing is guided) marks
+        requests whose sampler runs classifier-free guidance: their SERVER
+        segment is accounted at exactly 2× model FLOPs (the cond+uncond
+        lane pair — see :func:`flops_split_steps`) while the request,
+        image, and latency counts stay per-REQUEST: a guided pair is one
+        request occupying two lane-ticks per tick, never two requests
+        (unit-tested in tests/test_serve.py).
 
         ``decisions`` ({req_id: AdmissionDecision}, when the KID gate is
         on) adds the ``admission`` section (:func:`admission_summary`) and
@@ -234,9 +245,13 @@ class ServeMetrics:
                 continue
             n_served += 1
             n_srv, n_cli = steps_of(r)
-            split = flops_split_steps(n_srv, n_cli, flops_per_call, r.batch)
+            split = flops_split_steps(
+                n_srv, n_cli, flops_per_call, r.batch,
+                guided=bool(guided_of(r)) if guided_of is not None else False)
             server_f += split["server_flops"]
             client_f += split["client_flops"]
+            # r.batch IMAGES regardless of guidance: the shadow (uncond)
+            # lane of a guided pair never emits an image
             images += r.batch
         total = max(server_f + client_f, 1.0)
         pct = (lambda q: float(np.percentile(lat_t, q))) if lat_t.size \

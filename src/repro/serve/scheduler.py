@@ -72,19 +72,26 @@ class Request:
 
     req_id: int
     key: Any                    # PRNGKey; lane i uses fold_in(key, i)
-    batch: int = 1              # images requested (slots occupied)
+    batch: int = 1              # images requested (slots occupied; a
+    #                             GUIDED sampler costs 2 lanes per image)
     cut_ratio: float = 0.5      # c: server runs (1-c)·T steps, client c·T
     client_idx: int = 0         # which private model finishes t_split..1
     arrival_tick: int = 0       # not visible to the engine before this tick
     sampler: str = "ddpm"       # trajectory/update family, from the
     #                             engine's registered sampler menu ("ddpm"
-    #                             = dense chain; e.g. "ddim50" = strided)
+    #                             = dense chain; e.g. "ddim50" = strided; a
+    #                             guided entry doubles lanes + server FLOPs)
+    label: int = 0              # class label for conditional models; only
+    #                             read when the engine is conditional (the
+    #                             guided pair conditions its primary lane
+    #                             on it, the shadow lane on the null label)
 
     def __post_init__(self):
         assert self.batch >= 1, self.batch
         assert 0.0 <= self.cut_ratio <= 1.0, self.cut_ratio
         assert self.client_idx >= 0, self.client_idx   # finisher indexes a
         #                                                stacked client axis
+        assert self.label >= 0, self.label
 
 
 class FIFOScheduler:
@@ -93,15 +100,24 @@ class FIFOScheduler:
     ``pack=True`` enables trajectory-aware wave packing at
     :meth:`select_window`: same-class candidates behind the head coalesce
     into the window's freed-slot budget (see the module docstring for the
-    liveness argument).  FIFO's class is (sampler, cut_ratio) — requests
-    that will run the same number of server steps."""
+    liveness argument).  FIFO's class is (sampler, cut_ratio, guidance) —
+    requests that will run the same number of server steps with the same
+    lane geometry.
 
-    def __init__(self, admission=None, pack: bool = False):
+    ``samplers`` (the engine injects its menu when the scheduler arrives
+    without one) lets the budget walk price GUIDED samplers at 2 lanes
+    per image — a classifier-free-guidance request occupies a cond+uncond
+    lane pair per image, so fitting it against ``free_slots`` by
+    ``Request.batch`` alone would overcommit the slot pool."""
+
+    def __init__(self, admission=None, pack: bool = False,
+                 samplers: Optional[Dict[str, Any]] = None):
         self._queue: List[Request] = []
         self._seq = itertools.count()
         self._order = {}
         self.admission = admission          # Optional[AdmissionPolicy]
         self.pack = bool(pack)
+        self.samplers = samplers            # name -> Sampler (lane costing)
         self._rejections: List[Any] = []    # AdmissionDecisions from select
         self.aging_promotions = 0           # FIFO never reorders: stays 0
         self.registry = None                # obs: engine attaches its own
@@ -153,14 +169,30 @@ class FIFOScheduler:
         """Admission order — the only thing policies override."""
         return self.arrived(now)
 
+    def _guidance_of(self, req: Request) -> float:
+        """Guidance scale w of the request's sampler per the injected
+        menu (0.0 for unguided/unknown).  Keys wave classes: guided and
+        unguided cohorts have different lane geometry (pairs vs solo
+        lanes) and must not coalesce even at equal trajectory cost."""
+        s = (self.samplers or {}).get(req.sampler)
+        return float(s.w) if s is not None and s.guided else 0.0
+
+    def lanes_of(self, req: Request) -> int:
+        """Slot-pool lanes the request occupies: ``batch`` images, ×2
+        when its sampler is guided (each image is a cond+uncond lane
+        pair stepped through one model dispatch)."""
+        s = (self.samplers or {}).get(req.sampler)
+        mult = 2 if s is not None and s.guided else 1
+        return req.batch * mult
+
     def _class_of(self, req: Request):
         """Wave-packing class: requests in one class retire at the same
         scan-window boundary when admitted together.  For FIFO that is
-        (sampler, cut_ratio) — same trajectory, same number of server
-        steps.  :class:`CutRatioScheduler` refines this to the EFFECTIVE
-        cost so bumped requests pack with the cohort they actually run
-        with."""
-        return (req.sampler, req.cut_ratio)
+        (sampler, cut_ratio, guidance w) — same trajectory, same number
+        of server steps, same lane geometry.  :class:`CutRatioScheduler`
+        refines the cut to the EFFECTIVE cost so bumped requests pack
+        with the cohort they actually run with."""
+        return (req.sampler, req.cut_ratio, self._guidance_of(req))
 
     def select(self, free_slots: int, now: int) -> List[Request]:
         """One-tick admission — :meth:`select_window` with window=1."""
@@ -210,10 +242,10 @@ class FIFOScheduler:
         else:
             picked = []
             for r in served:
-                if r.batch > free_slots:
+                if self.lanes_of(r) > free_slots:
                     break
                 picked.append(r)
-                free_slots -= r.batch
+                free_slots -= self.lanes_of(r)
         # one rebuild pass instead of per-request list.remove: O(queue)
         # per boundary, not O(queue^2) — Request hashes by identity
         # (eq=False), so membership is the same object test remove() did
@@ -240,16 +272,17 @@ class FIFOScheduler:
         picked: List[Request] = []
         while remaining:
             head = remaining[0]
-            if head.batch > free_slots:
+            if self.lanes_of(head) > free_slots:
                 break
             picked.append(head)
-            free_slots -= head.batch
+            free_slots -= self.lanes_of(head)
             cls = self._class_of(head)
             rest: List[Request] = []
             for r in remaining[1:]:
-                if self._class_of(r) == cls and r.batch <= free_slots:
+                if self._class_of(r) == cls and \
+                        self.lanes_of(r) <= free_slots:
                     picked.append(r)
-                    free_slots -= r.batch
+                    free_slots -= self.lanes_of(r)
                 else:
                     rest.append(r)
             remaining = rest
@@ -290,11 +323,10 @@ class CutRatioScheduler(FIFOScheduler):
     def __init__(self, T: int, aging: float = 1.0,
                  samplers: Optional[Dict[str, Any]] = None, admission=None,
                  pack: bool = False):
-        super().__init__(admission=admission, pack=pack)
+        super().__init__(admission=admission, pack=pack, samplers=samplers)
         assert aging > 0.0, "aging=0 reintroduces starvation"
         self.T = T
         self.aging = aging
-        self.samplers = samplers
 
     def server_cost(self, req: Request) -> float:
         """Server model calls this request still needs: its trajectory's
@@ -312,11 +344,16 @@ class CutRatioScheduler(FIFOScheduler):
 
     def nominal_cost(self, req: Request) -> float:
         """Trajectory step count above the NOMINAL cut — the price the
-        request asked for, independent of any admission bump."""
+        request asked for, independent of any admission bump.  A GUIDED
+        sampler doubles the server segment (cond+uncond model evaluation
+        per step), so guided jobs price as 2× their trajectory cost —
+        nominal costs are then ≤ 2T and the aging bound becomes
+        ``2T / aging`` ticks, still finite."""
         if self.samplers and req.sampler in self.samplers:
             from repro.core.collafuse import CutPlan
-            return float(CutPlan(self.T, req.cut_ratio).traj_server_steps(
-                self.samplers[req.sampler]))
+            s = self.samplers[req.sampler]
+            steps = float(CutPlan(self.T, req.cut_ratio).traj_server_steps(s))
+            return steps * (2.0 if s.guided else 1.0)
         return (1.0 - req.cut_ratio) * self.T
 
     def _score(self, req: Request, now: int) -> float:
@@ -326,11 +363,12 @@ class CutRatioScheduler(FIFOScheduler):
         return self.nominal_cost(req) - self.aging * wait
 
     def _class_of(self, req: Request):
-        """SJF wave class: (sampler, effective server cost).  Two requests
-        here occupy slots for the same number of ticks, so a packed
-        cohort's slots free at one boundary — bumped requests pack with
-        the cohort they actually execute with."""
-        return (req.sampler, self.server_cost(req))
+        """SJF wave class: (sampler, effective server cost, guidance w).
+        Two requests here occupy slots for the same number of ticks with
+        the same lane geometry, so a packed cohort's slots free at one
+        boundary — bumped requests pack with the cohort they actually
+        execute with."""
+        return (req.sampler, self.server_cost(req), self._guidance_of(req))
 
     def _candidates(self, now: int) -> List[Request]:
         """Aged-score order: once a starved request ages to the top it
@@ -366,7 +404,8 @@ class CutRatioScheduler(FIFOScheduler):
 def make_scheduler(policy: str, T: int, aging: float = 1.0, samplers=None,
                    admission=None, pack: bool = False):
     if policy == "fifo":
-        return FIFOScheduler(admission=admission, pack=pack)
+        return FIFOScheduler(admission=admission, pack=pack,
+                             samplers=samplers)
     if policy == "cut_ratio":
         return CutRatioScheduler(T, aging=aging, samplers=samplers,
                                  admission=admission, pack=pack)

@@ -111,8 +111,9 @@ def test_score_cache_is_per_cut_and_sampler(probe):
     pol = probe.with_min_kid(-1.0)
     for i in range(32):
         pol.decide(_req(i, 0.5, sampler="ddim"))
-    # only the nominal position was ever scored for this (sampler, cut)
-    assert ("ddim", CutPlan(T, 0.5).cut_index(_menu()["ddim"])) \
+    # only the nominal position was ever scored for this (sampler, cut);
+    # the guidance slot of the key is None for unguided samplers
+    assert ("ddim", CutPlan(T, 0.5).cut_index(_menu()["ddim"]), None) \
         in pol._kid_cache
     assert len(pol._decision_cache) == 1
 
@@ -339,20 +340,40 @@ def test_engine_all_rejected_returns_empty(world, probe):
     assert res.summary["served"] == 0
 
 
-def test_engine_rejects_policy_bound_to_different_server_model(world):
-    """A policy whose scores were calibrated under one server model must
-    not gate an engine running different weights — its floor guarantee
-    would be silently void for the tensors actually emitted."""
+def test_rebinding_changed_weights_bumps_version_and_rescores(world):
+    """A weight swap must never leave stale disclosure scores gating the
+    new model's tensors: binding a policy calibrated under one server
+    model into an engine running DIFFERENT weights bumps
+    ``params_version`` and drops every cached score and decision, so the
+    next decide re-scores under the weights actually serving."""
     sched, server, _, calib = world
     other = _init_fn(jax.random.PRNGKey(99))
     pol = AdmissionPolicy(sched, calib, min_kid=0.0, samplers=_menu(),
                           server_fn=functools.partial(_apply_fn, other))
-    with pytest.raises(AssertionError, match="server_fn disagrees"):
-        _engine(world, pol)
-    # same weights (even via a distinct partial object) must pass
+    stale_profile = pol.profile("ddim")
+    stale_decision = pol.decide(_req(0, 0.5))
+    assert pol._kid_cache and pol._decision_cache
+    assert pol.params_version == 0
+    _engine(world, pol)                      # binds the ENGINE's weights
+    assert pol.params_version == 1
+    assert not pol._kid_cache and not pol._decision_cache
+    # re-scored under the engine's weights: a fresh policy built directly
+    # against them must agree exactly (and the stale scores must not)
+    ref = AdmissionPolicy(sched, calib, min_kid=0.0, samplers=_menu(),
+                          server_fn=functools.partial(_apply_fn, server))
+    assert pol.profile("ddim") == ref.profile("ddim")
+    assert pol.profile("ddim") != stale_profile
+    d = pol.decide(_req(0, 0.5))
+    assert (d.kid, d.effective_cut) == \
+        ((rd := ref.decide(_req(0, 0.5))).kid, rd.effective_cut)
+    del stale_decision
+    # same weights (even via a distinct partial object): NO bump
     ok = AdmissionPolicy(sched, calib, min_kid=0.0, samplers=_menu(),
                          server_fn=functools.partial(_apply_fn, server))
+    ok.profile("ddim")
+    cached = dict(ok._kid_cache)
     _engine(world, ok)
+    assert ok.params_version == 0 and ok._kid_cache == cached
 
 
 # ---------------------------------------------------------------------------

@@ -441,3 +441,169 @@ def test_spare_column_registration_roundtrip_property(data):
         for start, length in spans:
             assert start == pos, (spans, eng._dyn_free)
             pos += length
+
+
+# ---------------------------------------------------------------------------
+# Classifier-free guidance: w=0 anchor, lane pairing, FLOP accounting
+# ---------------------------------------------------------------------------
+_CFG_CLASSES = 2
+
+
+def _srv_apply_cond(p, x, t, y=None):
+    b = x.shape[0]
+    freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    yc = (jnp.full((b,), _CFG_CLASSES, jnp.int32) if y is None
+          else jnp.clip(y, 0, _CFG_CLASSES))
+    temb = temb + p["yemb"][yc]
+    h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
+    return (h @ p["w2"]).reshape(x.shape)
+
+
+def _cfg_engine(schedule):
+    """One conditional engine per schedule family, cached across examples.
+
+    The menu pairs every unguided family with a GUIDED w=0 twin walking
+    the identical trajectory — requests swap between them by name only.
+    """
+    if not hasattr(_cfg_engine, "cache"):
+        _cfg_engine.cache = {}
+    if schedule not in _cfg_engine.cache:
+        from repro.diffusion.sampler import make_sampler
+        from repro.serve import EngineConfig, ServeEngine
+        d = _SRV_SIZE * _SRV_SIZE
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        params = {"w1": jax.random.normal(ks[0], (d + 8, 16)) / 4.0,
+                  "w2": jax.random.normal(ks[1], (16, d)) / 4.0,
+                  "yemb": jax.random.normal(
+                      ks[2], (_CFG_CLASSES + 1, 8)) / 4.0}
+        sched = (cosine_schedule if schedule == "cosine"
+                 else linear_schedule)(_SRV_T)
+        samplers = {
+            "ddpm": make_sampler(_SRV_T),
+            "ddim": make_sampler(_SRV_T, "ddim", 4, eta=0.0),
+            "ddpm_g0": make_sampler(_SRV_T, guidance=0.0),
+            "ddim_g0": make_sampler(_SRV_T, "ddim", 4, eta=0.0,
+                                    guidance=0.0),
+        }
+        cfg = EngineConfig(sched=sched, apply_fn=_srv_apply_cond,
+                           image_shape=(_SRV_SIZE, _SRV_SIZE, 1),
+                           slots=6, samplers=samplers,
+                           num_classes=_CFG_CLASSES)
+        _cfg_engine.cache[schedule] = ServeEngine(cfg, params)
+    return _cfg_engine.cache[schedule]
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_guided_w0_bitwise_equals_unguided_property(data):
+    """The correctness anchor as a property: for random request mixes on
+    EITHER schedule family, rerouting requests through the guided w=0
+    menu twin (doubled lane pairs, guided step, ε̂-combine) leaves every
+    completion bitwise unchanged."""
+    from repro.serve import Request
+    schedule = data.draw(st.sampled_from(["cosine", "linear"]),
+                         label="schedule")
+    eng = _cfg_engine(schedule)
+    n = data.draw(st.integers(1, 5), label="n_requests")
+    reqs = []
+    for i in range(n):
+        reqs.append(dict(
+            req_id=i,
+            key=jax.random.PRNGKey(data.draw(st.integers(0, 2**16),
+                                             label=f"seed{i}")),
+            batch=data.draw(st.sampled_from([1, 2]), label=f"batch{i}"),
+            cut_ratio=data.draw(st.sampled_from(_SRV_CUTS),
+                                label=f"cut{i}"),
+            sampler=data.draw(st.sampled_from(["ddpm", "ddim"]),
+                              label=f"sampler{i}"),
+            arrival_tick=data.draw(st.integers(0, 3), label=f"arr{i}"),
+            label=data.draw(st.integers(0, _CFG_CLASSES - 1),
+                            label=f"label{i}")))
+    r_plain = eng.serve([Request(**r) for r in reqs])
+    r_guided = eng.serve([Request(**{**r, "sampler": r["sampler"] + "_g0"})
+                          for r in reqs])
+    assert set(r_guided.completions) == set(r_plain.completions)
+    for rid, comp in r_plain.completions.items():
+        g = np.asarray(r_guided.completions[rid].x_mid)
+        p = np.asarray(comp.x_mid)
+        assert (g.view(np.uint32) == p.view(np.uint32)).all(), f"req {rid}"
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_lane_pair_pack_unpack_roundtrip_property(data):
+    """Guided admission packs cond/uncond lane pairs that always round-
+    trip: ``pair`` is an involution between the primary and shadow
+    halves, cond flags complement across each pair, the shadow carries
+    its primary's exact key rows (same x_T) and image index, and only
+    shadows are flagged — so unpack (retirement) emits each image once."""
+    from repro.serve.metrics import ServeMetrics
+    from repro.serve.scheduler import Request
+    eng = _cfg_engine("cosine")
+    b = data.draw(st.integers(1, 3), label="batch")
+    guided = data.draw(st.booleans(), label="guided")
+    need = 2 * b if guided else b
+    lanes = data.draw(st.permutations(list(range(6))),
+                      label="lanes")[:need]
+    req = Request(req_id=0,
+                  key=jax.random.PRNGKey(data.draw(st.integers(0, 2**16),
+                                                   label="seed")),
+                  batch=b, cut_ratio=0.5,
+                  sampler="ddpm_g0" if guided else "ddpm",
+                  label=data.draw(st.integers(0, _CFG_CLASSES - 1),
+                                  label="label"))
+    inflight, metrics = {}, ServeMetrics(6)
+    lane_req = np.full(6, -1, np.int64)
+    lane_img = np.full(6, -1, np.int64)
+    lane_shadow = np.zeros(6, bool)
+    k_init, k_srv, ys, pairs, conds = eng._admit_host(
+        req, list(lanes), 0, inflight, lane_req, lane_img, lane_shadow,
+        metrics)
+    assert inflight[0]["remaining"] == need
+    lane_of = {ln: i for i, ln in enumerate(lanes)}
+    for i, ln in enumerate(lanes):
+        j = lane_of[int(pairs[i])]
+        # involution: my pair's pair is me (solo lanes pair themselves)
+        assert int(pairs[j]) == ln
+        if guided:
+            assert j != i and bool(conds[i]) != bool(conds[j])
+            # shadow shares the primary's key rows -> identical x_T and
+            # noise draws, and owns the SAME image index
+            np.testing.assert_array_equal(k_init[i], k_init[j])
+            np.testing.assert_array_equal(k_srv[i], k_srv[j])
+            assert lane_img[ln] == lane_img[int(pairs[i])]
+        else:
+            assert j == i and bool(conds[i])
+    prim = {int(ln) for ln, c in zip(lanes, conds) if c}
+    shad = {int(ln) for ln, c in zip(lanes, conds) if not c}
+    assert {ln for ln in lanes if lane_shadow[ln]} == shad
+    assert len(prim) == b
+    if guided:
+        # primaries carry the request label, shadows the null row
+        assert (ys[list(map(lane_of.get, sorted(prim)))]
+                == req.label).all()
+        assert (ys[list(map(lane_of.get, sorted(shad)))]
+                == _CFG_CLASSES).all()
+    else:
+        # unguided lanes generate unconditionally: null label everywhere
+        assert (ys == _CFG_CLASSES).all()
+
+
+@given(n_srv=st.integers(0, 500), n_cli=st.integers(0, 500),
+       flops=st.floats(1.0, 1e12), batch=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_guided_flops_double_server_segment_only_property(n_srv, n_cli,
+                                                          flops, batch):
+    """A guided request burns exactly 2x the UNGUIDED server-segment
+    FLOPs (cond+uncond lanes through one dispatch) and the identical
+    client-segment FLOPs (the finisher is unguided)."""
+    plain = collafuse.flops_split_steps(n_srv, n_cli, flops, batch)
+    guided = collafuse.flops_split_steps(n_srv, n_cli, flops, batch,
+                                         guided=True)
+    assert guided["server_flops"] == 2.0 * plain["server_flops"]
+    assert guided["client_flops"] == plain["client_flops"]
+    # the fraction shifts DOWN for guided requests (server side heavier)
+    if n_srv > 0:
+        assert guided["client_fraction"] <= plain["client_fraction"]

@@ -953,3 +953,62 @@ def test_host_rows_walks_partial_shards(models):
     assert sorted(rows_fast) == [0, 1]
     for ln in (0, 1):
         np.testing.assert_array_equal(rows_fast[ln], rows[ln])
+
+
+# ---------------------------------------------------------------------------
+# classifier-free guidance: metrics accounting for lane pairs
+# ---------------------------------------------------------------------------
+NUM_CLASSES = 3
+
+
+def _apply_fn_cond(p, x, t, y=None):
+    b = x.shape[0]
+    freqs = jnp.exp(jnp.linspace(0.0, 3.0, 4))
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    temb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    yc = (jnp.full((b,), NUM_CLASSES, jnp.int32) if y is None
+          else jnp.clip(y, 0, NUM_CLASSES))
+    temb = temb + p["yemb"][yc]
+    h = jax.nn.silu(jnp.concatenate([x.reshape(b, -1), temb], -1) @ p["w1"])
+    return (h @ p["w2"]).reshape(x.shape)
+
+
+def test_guided_pair_counts_once_in_metrics():
+    """A guided request's cond+uncond pair is ONE request and ONE image
+    per batch lane: ``images``/``requests`` never double-count shadows,
+    the occupancy class (keyed sampler@cut@w) burns exactly 2x the
+    lane-ticks, and the FLOP split doubles the server segment only."""
+    from repro.diffusion.sampler import make_sampler
+    sched = cosine_schedule(T)
+    d = SIZE * SIZE
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    server = {"w1": jax.random.normal(ks[0], (d + 8, 32)) / 6.0,
+              "w2": jax.random.normal(ks[1], (32, d)) / 6.0,
+              "yemb": jax.random.normal(ks[2], (NUM_CLASSES + 1, 8)) / 6.0}
+    samplers = {"ddpm": make_sampler(T),
+                "ddpm_g": make_sampler(T, guidance=1.5)}
+    cfg = EngineConfig(sched=sched, apply_fn=_apply_fn_cond,
+                       image_shape=SHAPE, slots=4, samplers=samplers,
+                       num_classes=NUM_CLASSES)
+    eng = ServeEngine(cfg, server)
+
+    def run(name):
+        return eng.serve([Request(req_id=0, key=jax.random.PRNGKey(9),
+                                  batch=2, cut_ratio=0.5, sampler=name,
+                                  label=1)])
+    plain, guided = run("ddpm"), run("ddpm_g")
+    sp, sg = plain.summary, guided.summary
+    # one request, two images — the pair never double-counts
+    assert sp["requests"] == sg["requests"] == 1
+    assert sp["images"] == sg["images"] == 2
+    # server segment exactly doubles; the client finish would not (no
+    # client stack here, but the split itself is per-request)
+    assert sg["server_flops"] == 2.0 * sp["server_flops"]
+    assert sg["client_flops"] == sp["client_flops"]
+    # occupancy classes carry the guidance scale and the guided class
+    # burns exactly twice the lane-ticks over the same trajectory
+    occ_p, occ_g = sp["occupancy_by_class"], sg["occupancy_by_class"]
+    cut = CutPlan(T, 0.5).n_server_steps
+    assert occ_p == {f"ddpm@{cut}@0": 2 * cut}
+    assert occ_g == {f"ddpm_g@{cut}@1.5": 4 * cut}
+    assert np.isfinite(np.asarray(guided.completions[0].x_mid)).all()
